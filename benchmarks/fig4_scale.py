@@ -1,0 +1,73 @@
+"""Fig. 4 reproduction — scaling in the number of requests.
+
+Paper setup: U ∈ {100, 200, …, 1000}; EGP vs SCK vs RND (OPT omitted at
+scale, as in the paper — its CBC runs took up to 20 h; our exact DP is
+still run optionally for ground truth since it stays fast). Headline:
+EGP ≈ 1.5× SCK objective while remaining the fastest.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (egp_np, agp_np, opt_np, qos_matrix_np, rnd_np,
+                        sck_np, schedule_value_np, sigma_np,
+                        synthetic_instance)
+
+OUT = Path(__file__).resolve().parent.parent / "experiments" / "paper"
+
+
+def run(trials: int = 10, users=tuple(range(100, 1001, 100)), seed0: int = 0,
+        with_opt: bool = True, verbose: bool = True):
+    rows = []
+    for U in users:
+        for t in range(trials):
+            inst = synthetic_instance(U, seed=seed0 + 7919 * t + U)
+            Q = qos_matrix_np(inst)
+            vals, times = {}, {}
+            for name, fn in [("egp", egp_np), ("agp", agp_np),
+                             ("sck", sck_np)] + ([("opt", opt_np)]
+                                                 if with_opt else []):
+                t0 = time.perf_counter()
+                x = fn(inst, Q)
+                times[name] = time.perf_counter() - t0
+                vals[name] = sigma_np(inst, x, Q)
+            t0 = time.perf_counter()
+            _, y = rnd_np(inst, seed=t)
+            times["rnd"] = time.perf_counter() - t0
+            vals["rnd"] = schedule_value_np(inst, y, Q)
+            rows.append({"U": U, "trial": t, "values": vals, "times": times})
+        if verbose:
+            sub = [r for r in rows if r["U"] == U]
+            means = {k: float(np.mean([r["values"][k] for r in sub]))
+                     for k in sub[0]["values"]}
+            print(f"U={U}: mean values {({k: round(v,1) for k,v in means.items()})}")
+
+    summary = {}
+    names = rows[0]["values"].keys()
+    for name in names:
+        summary[name] = {
+            "mean_value": float(np.mean([r["values"][name] for r in rows])),
+            "mean_time_s": float(np.mean([r["times"][name] for r in rows])),
+        }
+    if "opt" in summary:
+        for name in names:
+            summary[name]["mean_ratio"] = float(np.mean(
+                [r["values"][name] / max(r["values"]["opt"], 1e-9)
+                 for r in rows]))
+    egp_vs_sck = float(np.mean([r["values"]["egp"] / max(r["values"]["sck"], 1e-9)
+                                for r in rows]))
+    summary["egp_over_sck"] = egp_vs_sck
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "fig4_scale.json").write_text(
+        json.dumps({"rows": rows, "summary": summary}, indent=1))
+    if verbose:
+        print(json.dumps(summary, indent=1))
+    return summary
+
+
+if __name__ == "__main__":
+    run()

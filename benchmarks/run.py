@@ -1,0 +1,70 @@
+"""Benchmark aggregator — one entry per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV rows. --full uses the paper's trial
+counts (slow); the default is a reduced-but-faithful pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    trials3 = 10 if args.full else 4
+    trials4 = 100 if args.full else 3
+    trials5 = 100 if args.full else 50
+
+    print("name,us_per_call,derived")
+
+    from benchmarks import fig3_validation, fig4_scale, fig5_realworld
+    from benchmarks import kernels_micro, roofline
+
+    t0 = time.perf_counter()
+    s3 = fig3_validation.run(trials=trials3, verbose=False,
+                             literal_agp=args.full)
+    dt = (time.perf_counter() - t0) * 1e6 / trials3
+    print(f"fig3_validation,{dt:.0f},egp_ratio={s3['egp']['mean_ratio']:.3f}"
+          f";agp_ratio={s3['agp']['mean_ratio']:.3f}"
+          f";sck_ratio={s3['sck']['mean_ratio']:.3f}"
+          f";paper=0.904/0.900/0.607")
+
+    t0 = time.perf_counter()
+    s4 = fig4_scale.run(trials=trials4, verbose=False)
+    dt = (time.perf_counter() - t0) * 1e6 / trials4
+    print(f"fig4_scale,{dt:.0f},egp_over_sck={s4['egp_over_sck']:.2f}"
+          f";paper=~1.5x;egp_ratio={s4['egp'].get('mean_ratio', -1):.3f}")
+
+    t0 = time.perf_counter()
+    s5 = fig5_realworld.run(trials=trials5, verbose=False)
+    dt = (time.perf_counter() - t0) * 1e6 / trials5
+    mobile = s5["placements"]["egp"].get("MobileNet", 0)
+    total = sum(s5["placements"]["egp"].values())
+    print(f"fig5_realworld,{dt:.0f},egp_mobilenet={mobile}/{total}"
+          f";paper=exclusively_mobilenet"
+          f";qos_egp={s5['mean_qos']['egp']:.3f}")
+
+    for name, us, derived in kernels_micro.run(verbose=False):
+        print(f"kernel_{name},{us:.1f},{derived}")
+
+    rows = roofline.build(verbose=False)
+    ok_rows = [r for r in rows if "skip" not in r]
+    if ok_rows:
+        worst = min(ok_rows, key=lambda r: r["roofline_fraction"])
+        best = max(ok_rows, key=lambda r: r["roofline_fraction"])
+        import numpy as np
+        med = float(np.median([r["roofline_fraction"] for r in ok_rows]))
+        print(f"roofline_table,0,cells={len(ok_rows)};median_fraction={med:.3f}"
+              f";worst={worst['arch']}/{worst['shape']}={worst['roofline_fraction']:.3f}"
+              f";best={best['arch']}/{best['shape']}={best['roofline_fraction']:.3f}")
+    else:
+        print("roofline_table,0,no dry-run artifacts (run repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Reproduce the paper's figures quickly (reduced trial counts).
+
+    PYTHONPATH=src python examples/placement_study.py
+
+Fig. 3 (validation vs OPT), Fig. 4 (scaling), Fig. 5 (real-world Table-I
+catalog). Full-size runs: python -m benchmarks.run --full.
+"""
+from benchmarks import fig3_validation, fig4_scale, fig5_realworld
+
+print("== Fig 3: validation vs optimal (reduced) ==")
+s3 = fig3_validation.run(trials=2, verbose=False, literal_agp=False)
+for k, v in s3.items():
+    print(f"  {k:5s} ratio={v['mean_ratio']:.3f} time={v['mean_time_s']*1e3:.1f}ms")
+print("  paper: EGP 0.904, AGP 0.900, SCK 0.607")
+
+print("== Fig 4: scaling to 1000 users (reduced) ==")
+s4 = fig4_scale.run(trials=1, verbose=False)
+print(f"  EGP/SCK objective ratio: {s4['egp_over_sck']:.2f} (paper: ~1.5x)")
+
+print("== Fig 5: real-world Table-I catalog ==")
+s5 = fig5_realworld.run(trials=30, verbose=False)
+print(f"  EGP placements: {dict((k, v) for k, v in s5['placements']['egp'].items() if v)}")
+print("  paper: all non-random algorithms place MobileNet exclusively")

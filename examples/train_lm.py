@@ -1,0 +1,27 @@
+"""Train an LM with the full fault-tolerance stack.
+
+    PYTHONPATH=src python examples/train_lm.py                  # tiny, fast
+    PYTHONPATH=src python examples/train_lm.py --preset full \
+        --arch smollm_360m --steps 300                          # ~360M run
+
+Demonstrates: seekable pipeline, remat, AdamW, async atomic checkpoints,
+crash-resume (kill it mid-run and re-run the same command), optional
+gradient compression (--compression topk|int8).
+"""
+import argparse
+
+from repro.launch.train import run_training
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--compression", default=None)
+    args = ap.parse_args()
+    out = run_training(arch=args.arch, preset=args.preset, steps=args.steps,
+                       checkpoint_dir=args.checkpoint_dir,
+                       compression=args.compression)
+    print(f"loss: {out['losses'][0]:.4f} → {out['losses'][-1]:.4f} "
+          f"over {len(out['losses'])} steps (resumed at {out['start_step']})")

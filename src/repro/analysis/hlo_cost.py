@@ -1,0 +1,374 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies **once**, but our
+models scan over layers (and flash-attention scans over chunks), so raw
+numbers under-count FLOPs/bytes by ~n_layers×. The CPU backend annotates
+every while with ``backend_config={"known_trip_count":{"n": ...}}`` — this
+module walks the call graph multiplying by trip counts and derives:
+
+* ``flops``        — 2·M·N·K for every dot (from result shape × contracting
+                     dims), conv similarly, + 1 flop/element for elementwise
+                     and reduce ops (transcendentals counted 1).
+* ``hbm_bytes``    — consumer-side bytes-accessed: Σ operand sizes + result
+                     size per instruction, fusion boundaries only (reads and
+                     writes inside a fusion stay in registers/VMEM).
+                     ``dynamic-update-slice`` roots count the *update* slice
+                     (in-place aliasing), not the full destination buffer.
+* ``collectives``  — per-type counts + operand/result bytes, trip-scaled.
+
+All values are **per device** (the module is post-partitioning).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+#: ops that neither read nor write HBM themselves (aliases / metadata)
+_TRANSPARENT = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "domain", "opt-barrier",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z0-9\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{\s*$")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems_total, bytes_total = 0, 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return elems_total, bytes_total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rtype: str
+    op: str
+    args_str: str
+    raw: str
+    operands: List[str]
+    attrs: Dict[str, str]
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "HloCost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.dot_flops += other.dot_flops * scale
+        self.hbm_bytes += other.hbm_bytes * scale
+        for k, v in other.collective.items():
+            slot = self.collective.setdefault(
+                k, {"count": 0.0, "operand_bytes": 0.0, "result_bytes": 0.0})
+            for kk in slot:
+                slot[kk] += v.get(kk, 0.0) * scale
+
+    def as_dict(self) -> dict:
+        total_ob = sum(v["operand_bytes"] for v in self.collective.values())
+        total_rb = sum(v["result_bytes"] for v in self.collective.values())
+        return {
+            "flops": self.flops, "dot_flops": self.dot_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collectives": {**{k: dict(v) for k, v in self.collective.items()},
+                            "total_operand_bytes": total_ob,
+                            "total_result_bytes": total_rb},
+        }
+
+
+def _parse_operands(args_str: str) -> List[str]:
+    """Operand names up to the matching close-paren of the op call."""
+    depth = 1
+    out, cur = [], []
+    for ch in args_str:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    names = []
+    for tok in out:
+        tok = tok.strip().lstrip("%")
+        tok = tok.split(" ")[0].split("=")[0].strip()
+        if tok:
+            names.append(tok)
+    return names
+
+
+def _parse_attrs(raw: str) -> Dict[str, str]:
+    attrs = {}
+    for m in re.finditer(r"([a-z_]+)=(\{[^{}]*(?:\{[^{}]*\})?[^{}]*\}|%[\w.\-]+|\"[^\"]*\"|[\w.\-]+)", raw):
+        attrs[m.group(1)] = m.group(2)
+    return attrs
+
+
+def parse_module(text: str):
+    comps: Dict[str, List[Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", line)  # strip /*index=N*/ comments
+        if not line.strip():
+            cur = None
+            continue
+        mc = _COMP_RE.match(line)
+        if mc and "=" not in line.split("->")[0]:
+            cur = mc.group(2)
+            comps[cur] = []
+            if mc.group(1):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi and cur is not None:
+            name, rtype, op, rest = mi.groups()
+            comps[cur].append(Instr(
+                name=name, rtype=rtype, op=op, args_str=rest, raw=line,
+                operands=_parse_operands(rest), attrs=_parse_attrs(rest)))
+    return comps, entry
+
+
+def _dims_product(type_str: str, dims: List[int]) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 1
+    shape = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    p = 1
+    for d in dims:
+        if d < len(shape):
+            p *= shape[d]
+    return p
+
+
+def _dot_flops(instr: Instr, types: Dict[str, str]) -> float:
+    relems, _ = _shape_elems_bytes(instr.rtype)
+    lhs = instr.operands[0] if instr.operands else None
+    lhs_type = types.get(lhs, "")
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.raw)
+    cdims = [int(x) for x in m.group(1).split(",")] if (m and m.group(1)) else []
+    k = _dims_product(lhs_type, cdims) if lhs_type else 1
+    return 2.0 * relems * max(k, 1)
+
+
+def _trip_count(instr: Instr) -> float:
+    m = re.search(r"known_trip_count[^0-9]*([0-9]+)", instr.raw)
+    return float(m.group(1)) if m else 1.0
+
+
+def _fusion_root(comp: List[Instr]) -> Optional[Instr]:
+    for ins in comp:
+        if "ROOT" in ins.raw.split("=")[0]:
+            return ins
+    return comp[-1] if comp else None
+
+
+def _comp_cost(comp_name: str, comps, types_cache, memo,
+               trace=None, mult=1.0) -> HloCost:
+    if trace is None and comp_name in memo:
+        return memo[comp_name]
+    memo[comp_name] = HloCost()  # cycle guard
+    instrs = comps.get(comp_name, [])
+    types = {i.name: i.rtype for i in instrs}
+    types_cache[comp_name] = types
+    cost = HloCost()
+
+    def log(ins, bytes_, kind="hbm"):
+        if trace is not None and bytes_ * mult > 0:
+            m = re.search(r'op_name="([^"]+)"', ins.raw)
+            trace.append((bytes_ * mult, kind, ins.op,
+                          ins.rtype.split("{")[0][:48],
+                          (m.group(1) if m else "?")[-80:]))
+
+    for ins in instrs:
+        op = ins.op
+        _, rbytes = _shape_elems_bytes(ins.rtype)
+        relems, _ = _shape_elems_bytes(ins.rtype)
+
+        if op in _TRANSPARENT:
+            continue
+        if op == "while":
+            trips = _trip_count(ins)
+            body = ins.attrs.get("body", "").lstrip("%")
+            cond = ins.attrs.get("condition", "").lstrip("%")
+            if body in comps:
+                cost.add(_comp_cost(body, comps, types_cache, memo,
+                                    trace, mult * trips), trips)
+            if cond in comps:
+                cost.add(_comp_cost(cond, comps, types_cache, memo,
+                                    trace, mult * trips), trips)
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for key in ("to_apply", "true_computation", "false_computation",
+                        "called_computations", "calls"):
+                sub = ins.attrs.get(key, "").lstrip("%")
+                if sub in comps:
+                    cost.add(_comp_cost(sub, comps, types_cache, memo,
+                                        trace, mult))
+            continue
+
+        kind = next((c for c in _COLLECTIVES
+                     if op in (c, c + "-start")), None)
+        if op.endswith("-done"):
+            continue
+        obytes = sum(_shape_elems_bytes(types.get(o, ""))[1]
+                     for o in ins.operands)
+        if kind:
+            slot = cost.collective.setdefault(
+                kind, {"count": 0.0, "operand_bytes": 0.0,
+                       "result_bytes": 0.0})
+            slot["count"] += 1
+            slot["operand_bytes"] += obytes
+            slot["result_bytes"] += rbytes
+            cost.hbm_bytes += obytes + rbytes
+            log(ins, obytes + rbytes, "coll")
+            continue
+
+        if op == "fusion":
+            sub = ins.attrs.get("calls", "").lstrip("%")
+            root = _fusion_root(comps.get(sub, []))
+            # flops from all dots/elementwise inside the fused computation
+            inner = _comp_cost(sub, comps, types_cache, memo)
+            cost.flops += inner.flops
+            cost.dot_flops += inner.dot_flops
+            # pure-convert fusions: see the `convert` normalization below
+            body_ops = {i.op for i in comps.get(sub, [])} - _TRANSPARENT
+            if body_ops <= {"convert"}:
+                continue
+            # in-place update fusions: a contained dynamic-update-slice
+            # whose result is buffer-sized (root may be a convert wrapped
+            # around the DUS by CPU float normalization)
+            dus = next((i for i in comps.get(sub, [])
+                        if i.op in ("dynamic-update-slice", "scatter")), None)
+            # bytes at the fusion boundary only
+            wbytes = rbytes
+            if dus is not None and root is not None and root.op in (
+                    "dynamic-update-slice", "scatter", "convert", "copy"):
+                root = dus
+                # in-place update fusion: writes = update slice; the aliased
+                # base operand (≈ result-sized) is neither read nor written
+                # in full — drop the largest operand from the read count.
+                sub_types = types_cache.get(sub, {})
+                upd = root.operands[1] if len(root.operands) > 1 else None
+                ub = _shape_elems_bytes(sub_types.get(upd, ""))[1]
+                wbytes = ub or rbytes
+                op_sizes = sorted(
+                    (_shape_elems_bytes(types.get(o, ""))[1]
+                     for o in ins.operands), reverse=True)
+                if op_sizes and op_sizes[0] >= rbytes // 2:
+                    obytes -= op_sizes[0]
+                obytes = max(obytes, wbytes)  # the update data is read
+            elif any(i.op in ("dynamic-slice", "gather")
+                     for i in comps.get(sub, [])):
+                # slice-extraction fusion (root may be transpose/convert
+                # around the slice): only the extracted region of the big
+                # operand is read
+                op_sizes = sorted(
+                    (_shape_elems_bytes(types.get(o, ""))[1]
+                     for o in ins.operands), reverse=True)
+                if op_sizes and op_sizes[0] > 4 * rbytes:
+                    obytes = obytes - op_sizes[0] + rbytes
+            cost.hbm_bytes += obytes + wbytes
+            log(ins, obytes + wbytes)
+            continue
+
+        if op in ("dynamic-slice", "gather"):
+            # reads only the extracted region (+ tiny indices), writes result
+            cost.hbm_bytes += 2 * rbytes
+            cost.flops += relems
+            log(ins, 2 * rbytes)
+            continue
+        if op == "convert":
+            # TARGET-HARDWARE NORMALIZATION (documented in EXPERIMENTS.md):
+            # XLA-CPU FloatNormalization legalizes every bf16 op through
+            # f32, materializing f32 shadow copies of bf16 buffers (e.g.
+            # the full KV cache per decode step). TPUs compute bf16
+            # natively — these converts do not exist in the TPU HLO — so
+            # dtype converts are costed as fused (zero HBM traffic).
+            cost.flops += relems
+            continue
+
+        if op == "dot":
+            cost.dot_flops += _dot_flops(ins, types)
+            cost.flops += _dot_flops(ins, types)
+            cost.hbm_bytes += obytes + rbytes
+            log(ins, obytes + rbytes)
+            continue
+        if op == "convolution":
+            # approximate: 2 × result elems × (kernel elems / output feature)
+            kern = ins.operands[1] if len(ins.operands) > 1 else None
+            kelems, _ = _shape_elems_bytes(types.get(kern, ""))
+            cost.flops += 2.0 * relems * max(kelems, 1) ** 0.5
+            cost.hbm_bytes += obytes + rbytes
+            continue
+        if op == "dynamic-update-slice":
+            upd = ins.operands[1] if len(ins.operands) > 1 else None
+            ub = _shape_elems_bytes(types.get(upd, ""))[1]
+            cost.hbm_bytes += 2 * ub
+            log(ins, 2 * ub)
+            continue
+
+        # generic elementwise / reduce / data movement
+        cost.flops += relems  # ~1 flop per output element
+        cost.hbm_bytes += obytes + rbytes
+        log(ins, obytes + rbytes)
+
+    memo[comp_name] = cost
+    return cost
+
+
+def analyze_hlo(text: str, trace: bool = False):
+    comps, entry = parse_module(text)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    if entry is None:
+        return HloCost().as_dict()
+    memo: Dict[str, HloCost] = {}
+    tr = [] if trace else None
+    cost = _comp_cost(entry, comps, {}, memo, tr, 1.0)
+    out = cost.as_dict()
+    out["entry_computation"] = entry
+    out["n_computations"] = len(comps)
+    if trace:
+        tr.sort(reverse=True)
+        return out, tr
+    return out

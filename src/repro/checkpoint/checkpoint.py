@@ -1,0 +1,203 @@
+"""Fault-tolerant checkpointing: atomic, sharded, resharding-on-restore.
+
+Layout (one step):
+
+    <dir>/step_000123.tmp-<nonce>/     — written here first
+        manifest.json                  — tree structure, shapes, dtypes,
+                                         sha256 per leaf, mesh/pspec note
+        leaf_00000.npy …               — one .npy per pytree leaf
+    <dir>/step_000123/                 — atomic rename on completion
+
+Properties required at 1000+ nodes, all implemented here single-process
+(the multi-host variant shards leaves by process index — the manifest
+format already records per-leaf paths so that is a writer-policy change):
+
+* **atomicity** — a crash mid-write never corrupts the latest checkpoint
+  (tmp dir + rename; restore only considers dirs with a manifest).
+* **integrity** — sha256 per leaf, verified on restore.
+* **keep-last-k GC** + auto-resume from the newest valid step.
+* **async save** — a background thread serializes device arrays after
+  they are fetched, so the train loop blocks only for the device→host copy.
+* **resharding restore** — restore takes a target mesh + pspec tree and
+  ``jax.device_put``s each leaf to its new sharding: a checkpoint written
+  on 512 chips restores onto a 256-chip survivor mesh (elastic scaling).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]
+
+
+def _tree_leaves_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16",
+           "int8", "uint64", "uint32", "uint16", "uint8", "bool",
+           "complex64", "complex128"}
+
+
+def _encode_leaf(arr: np.ndarray):
+    """np.save silently voids ml_dtypes (bfloat16, fp8): store those as raw
+    uint8 bytes and record the logical dtype in the manifest."""
+    if arr.dtype.name in _NATIVE:
+        return arr, arr.dtype.name, False
+    raw = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+    return raw, arr.dtype.name, True
+
+
+def _decode_leaf(raw: np.ndarray, dtype_name: str, shape, encoded: bool):
+    if not encoded:
+        return raw
+    import ml_dtypes  # jax dependency, always present
+    dt = np.dtype(getattr(ml_dtypes, dtype_name))
+    return raw.view(dt).reshape(shape)
+
+
+def save_checkpoint(directory, step: int, tree, *, keep: int = 3) -> Path:
+    """Blocking save. Returns the final checkpoint path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _tree_leaves_with_paths(tree)
+    host_leaves = [np.asarray(l) for l in leaves]
+
+    nonce = os.urandom(4).hex()
+    tmp = directory / f"step_{step:09d}.tmp-{nonce}"
+    tmp.mkdir()
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "time": time.time(),
+        "leaves": [],
+    }
+    for i, arr in enumerate(host_leaves):
+        name = f"leaf_{i:05d}.npy"
+        stored, dtype_name, encoded = _encode_leaf(arr)
+        with open(tmp / name, "wb") as f:
+            np.save(f, stored)
+        manifest["leaves"].append({
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": dtype_name,
+            "raw_encoded": encoded,
+            "sha256": hashlib.sha256(stored.tobytes()).hexdigest(),
+        })
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    final = directory / f"step_{step:09d}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: Path, keep: int):
+    steps = sorted(p for p in directory.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and ".tmp-" not in p.name)
+    for p in steps[:-keep] if keep else []:
+        shutil.rmtree(p, ignore_errors=True)
+    # orphaned tmp dirs from crashes
+    for p in directory.iterdir():
+        if ".tmp-" in p.name and time.time() - p.stat().st_mtime > 3600:
+            shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    best = None
+    for p in directory.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and ".tmp-" not in p.name \
+                and (p / "manifest.json").exists():
+            best = max(best or -1, int(p.name.split("_")[1]))
+    return best
+
+
+def restore_checkpoint(directory, step: int, tree_like, *, mesh=None,
+                       pspecs=None, verify: bool = True):
+    """Restore into the structure of ``tree_like``. With ``mesh``+``pspecs``
+    each leaf is device_put with its target NamedSharding (resharding)."""
+    path = Path(directory) / f"step_{step:09d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert len(manifest["leaves"]) == len(leaves_like), \
+        f"leaf count mismatch: {len(manifest['leaves'])} vs {len(leaves_like)}"
+    spec_leaves = None
+    if pspecs is not None:
+        spec_leaves = jax.tree_util.tree_leaves(
+            pspecs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec))
+        assert len(spec_leaves) == len(leaves_like)
+
+    out = []
+    for i, (meta, like) in enumerate(zip(manifest["leaves"], leaves_like)):
+        arr = np.load(path / meta["name"])
+        if verify:
+            digest = hashlib.sha256(arr.tobytes()).hexdigest()
+            if digest != meta["sha256"]:
+                raise IOError(f"checksum mismatch in {meta['name']}")
+        arr = _decode_leaf(arr, meta["dtype"], meta["shape"],
+                           meta.get("raw_encoded", False))
+        if mesh is not None and spec_leaves is not None:
+            sharding = jax.sharding.NamedSharding(mesh, spec_leaves[i])
+            arr = jax.device_put(arr, sharding)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async keep-k manager with auto-resume."""
+
+    def __init__(self, directory, *, keep: int = 3, every: int = 100):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.every = every
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def maybe_save(self, step: int, tree) -> bool:
+        if step % self.every:
+            return False
+        self.wait()
+        # fetch to host synchronously (cheap vs serialization), write async
+        host = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host, keep=self.keep)
+            except BaseException as e:  # pragma: no cover
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error
+
+    def restore_latest(self, tree_like, *, mesh=None, pspecs=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, restore_checkpoint(self.directory, step, tree_like,
+                                        mesh=mesh, pspecs=pspecs)

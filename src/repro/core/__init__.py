@@ -1,0 +1,48 @@
+"""repro.core — the PIES problem (paper's contribution) as a library.
+
+Host reference (NumPy, paper-pseudocode-faithful) and jit-able JAX
+implementations of: the QoS model (Eqs. 1–6), OMS scheduling (Alg. 1),
+AGP (Alg. 2), EGP (Alg. 3), the SCK/RND baselines and an exact solver.
+"""
+from .instance import (
+    PIESInstance,
+    JaxInstance,
+    synthetic_instance,
+    realworld_instance,
+    tiny_instance,
+    REALWORLD_CATALOG,
+)
+from .qos import (
+    qos_matrix_np,
+    qos_matrix_jnp,
+    eligibility_np,
+    eligibility_jnp,
+    delay_np,
+    accuracy_satisfaction_np,
+    delay_satisfaction_np,
+)
+from .scheduling import oms_np, oms_jnp, sigma_np, sigma_jnp, sigma_user_np, schedule_value_np
+from .placement import (
+    egp_np,
+    agp_np,
+    agp_literal_np,
+    sck_np,
+    rnd_np,
+    egp_place_jax,
+    agp_place_jax,
+    place_and_schedule,
+)
+from .opt import opt_np, opt_edge_np, brute_force_np
+
+__all__ = [
+    "PIESInstance", "JaxInstance", "synthetic_instance", "realworld_instance",
+    "tiny_instance", "REALWORLD_CATALOG",
+    "qos_matrix_np", "qos_matrix_jnp", "eligibility_np", "eligibility_jnp",
+    "delay_np", "accuracy_satisfaction_np", "delay_satisfaction_np",
+    "oms_np", "oms_jnp", "sigma_np", "sigma_jnp", "sigma_user_np",
+    "schedule_value_np",
+    "egp_np", "agp_np", "agp_literal_np", "sck_np", "rnd_np",
+    "egp_place_jax", "agp_place_jax", "place_and_schedule",
+    "opt_np", "opt_edge_np", "brute_force_np",
+]
+from .dynamic import DynamicPlacer, evaluate_horizon  # noqa: E402

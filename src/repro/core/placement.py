@@ -1,0 +1,378 @@
+"""Placement algorithms for PIES (§V of the paper).
+
+Host (NumPy) implementations that follow the paper's pseudocode:
+
+* :func:`egp_np`  — Efficient Greedy Placement (Algorithm 3).
+* :func:`agp_np`  — Approximate Greedy Placement (Algorithm 2) with the
+  exact-marginal vectorization (σ(P∪{p}) − σ(P) = Σ_u max(0, Q[u,p] −
+  best_u), which is mathematically identical to recomputing OMS per
+  candidate as the paper does, but O(U·P) per pick instead of O(U·P²)).
+* :func:`agp_literal_np` — Algorithm 2 exactly as written (recomputes
+  optimal scheduling for every candidate at every pick); kept to reproduce
+  the paper's Fig. 3b runtime separation.
+* :func:`sck_np`  — the knapsack-DP baseline ("SCK").
+* :func:`rnd_np`  — random placement + random eligible scheduling ("RND").
+
+JAX implementations (jit-able, fixed-shape, masked; the composable modules
+the serving control plane uses):
+
+* :func:`egp_place_jax`, :func:`agp_place_jax` — vmapped-over-edges masked
+  ``lax.while_loop`` greedy selection over the QoS matrix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .instance import PIESInstance
+from .qos import qos_matrix_np, eligibility_np
+from .scheduling import oms_np, sigma_np
+
+__all__ = [
+    "egp_np", "agp_np", "agp_literal_np", "sck_np", "rnd_np",
+    "egp_place_jax", "agp_place_jax", "place_and_schedule",
+]
+
+
+# ===========================================================================
+# Algorithm 3: Efficient Greedy Placement (EGP)
+# ===========================================================================
+
+def egp_np(inst: PIESInstance, Q: Optional[np.ndarray] = None) -> np.ndarray:
+    """Efficient Greedy Placement — Algorithm 3, line-by-line.
+
+    Per edge cloud: seed the benefit map ``v[(s,m)] = Σ_{u∈U_e} Q(u,s_u,m)``
+    (lines 3–6); repeatedly take the highest-benefit unconsidered model
+    (line 11), place it if it fits (lines 12–14), re-score the *sibling*
+    implementations of the same service against the newly placed one over
+    the not-yet-satisfied users (lines 15–16), mark it considered (17) and
+    absorb fully-satisfied users into ``B`` (18–19); stop when storage is
+    exhausted, everyone is satisfied, or all candidates were considered
+    (line 20).
+    """
+    if Q is None:
+        Q = qos_matrix_np(inst)
+    x = np.zeros((inst.E, inst.P), dtype=bool)
+
+    for e in range(inst.E):
+        users = inst.users_of_edge(e)
+        if users.size == 0:
+            continue
+        req_services = np.unique(inst.u_service[users])
+        keys = np.nonzero(np.isin(inst.sm_service, req_services))[0]
+        if keys.size == 0:
+            continue
+        Qe = Q[users]  # [|U_e|, P]
+        v = {int(p): float(Qe[:, p].sum()) for p in keys}
+
+        considered: set = set()           # A
+        satisfied = np.zeros(users.size, dtype=bool)  # B (mask over users)
+        remaining = float(inst.R[e])      # R̂
+
+        while True:
+            cand = [p for p in v if p not in considered]
+            if not cand:
+                break
+            p_star = max(cand, key=lambda p: (v[p], -p))
+            placed = inst.sm_r[p_star] <= remaining + 1e-12
+            if placed:
+                x[e, p_star] = True
+                remaining -= float(inst.sm_r[p_star])
+                # lines 15–16: re-score sibling implementations of s*
+                s_star = inst.sm_service[p_star]
+                unsat = ~satisfied
+                for p in keys:
+                    p = int(p)
+                    if (inst.sm_service[p] == s_star and p != p_star
+                            and p not in considered):
+                        v[p] = float(
+                            (Qe[unsat, p] - Qe[unsat, p_star]).sum()
+                        )
+                # lines 18–19: users fully satisfied by (s*, m*)
+                satisfied |= Qe[:, p_star] >= 1.0 - 1e-9
+            considered.add(p_star)
+            if remaining <= 1e-12 or satisfied.all() or len(considered) == len(v):
+                break
+    return x
+
+
+# ===========================================================================
+# Algorithm 2: Approximate Greedy Placement (AGP)
+# ===========================================================================
+
+def agp_np(inst: PIESInstance, Q: Optional[np.ndarray] = None) -> np.ndarray:
+    """Approximate Greedy Placement — Algorithm 2 with exact marginals.
+
+    Identical picks to the literal pseudocode (argmax of σ(P ∪ {(e,(s,m))})
+    over feasible candidates) but computes each marginal in closed form:
+    adding model ``p`` at edge ``e`` improves only users in ``U_e`` whose
+    current best QoS is below ``Q[u, p]``.
+    """
+    if Q is None:
+        Q = qos_matrix_np(inst)
+    x = np.zeros((inst.E, inst.P), dtype=bool)
+    best = np.zeros(inst.U)  # σ_u under current placement
+
+    for e in range(inst.E):
+        users = inst.users_of_edge(e)
+        remaining = float(inst.R[e])
+        placed = np.zeros(inst.P, dtype=bool)
+        while True:
+            feasible = (~placed) & (inst.sm_r <= remaining + 1e-12)
+            if not feasible.any():
+                break
+            if users.size:
+                gains = np.maximum(Q[users] - best[users, None], 0.0).sum(axis=0)
+            else:
+                gains = np.zeros(inst.P)
+            gains = np.where(feasible, gains, -np.inf)
+            p_star = int(np.argmax(gains))
+            x[e, p_star] = True
+            placed[p_star] = True
+            remaining -= float(inst.sm_r[p_star])
+            if users.size:
+                best[users] = np.maximum(best[users], Q[users, p_star])
+    return x
+
+
+def agp_literal_np(inst: PIESInstance,
+                   Q: Optional[np.ndarray] = None) -> np.ndarray:
+    """Algorithm 2 exactly as printed: every candidate evaluated by running
+    optimal scheduling on σ(P ∪ {(e,(s,m))}) from scratch. O(U·P²) per pick
+    — this is the runtime the paper complains about in Fig. 3b."""
+    if Q is None:
+        Q = qos_matrix_np(inst)
+    x = np.zeros((inst.E, inst.P), dtype=bool)
+    for e in range(inst.E):
+        remaining = float(inst.R[e])
+        placed = np.zeros(inst.P, dtype=bool)
+        while True:
+            feasible = np.nonzero((~placed) & (inst.sm_r <= remaining + 1e-12))[0]
+            if feasible.size == 0:
+                break
+            best_val, best_p = -np.inf, -1
+            for p in feasible:
+                x[e, p] = True
+                val = sigma_np(inst, x, Q)  # full optimal scheduling
+                x[e, p] = False
+                if val > best_val:
+                    best_val, best_p = val, int(p)
+            x[e, best_p] = True
+            placed[best_p] = True
+            remaining -= float(inst.sm_r[best_p])
+    return x
+
+
+# ===========================================================================
+# Baselines: SCK (knapsack DP) and RND
+# ===========================================================================
+
+def sck_np(inst: PIESInstance, Q: Optional[np.ndarray] = None,
+           resolution: int = 1) -> np.ndarray:
+    """0/1-knapsack adaptation (the paper's "SCK" baseline).
+
+    Per edge cloud: items are the individual service models, weights are
+    their storage costs, values are their *standalone* total QoS
+    ``Σ_{u∈U_e} Q(u, s_u, m)`` (Eq. 1 summed over covered users — ignoring
+    that multiple implementations of one service overlap, which is exactly
+    why SCK underperforms). Solved with the standard DP; scheduling is then
+    done with OMS (Alg. 1), as in the paper.
+    """
+    if Q is None:
+        Q = qos_matrix_np(inst)
+    x = np.zeros((inst.E, inst.P), dtype=bool)
+    weights_all = np.round(inst.sm_r * resolution).astype(np.int64)
+
+    for e in range(inst.E):
+        users = inst.users_of_edge(e)
+        if users.size == 0:
+            continue
+        values_all = Q[users].sum(axis=0)
+        items = np.nonzero(values_all > 0.0)[0]
+        if items.size == 0:
+            continue
+        cap = int(np.floor(inst.R[e] * resolution))
+        dp = np.zeros(cap + 1)
+        choice = np.zeros((items.size, cap + 1), dtype=bool)
+        for i, p in enumerate(items):
+            w, val = int(weights_all[p]), float(values_all[p])
+            if w > cap:
+                continue
+            cand = dp[: cap - w + 1] + val
+            upd = cand > dp[w:]
+            choice[i, w:] = upd
+            dp[w:] = np.where(upd, cand, dp[w:])
+        # backtrack
+        c = cap
+        for i in range(items.size - 1, -1, -1):
+            if choice[i, c]:
+                p = items[i]
+                x[e, p] = True
+                c -= int(weights_all[p])
+    return x
+
+
+def rnd_np(inst: PIESInstance, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Random placement + random eligible scheduling baseline.
+
+    Returns ``(x, y)`` — unlike the greedy algorithms, RND also randomizes
+    the schedule (uniform over placed implementations of the requested
+    service; −1 if none).
+    """
+    rng = np.random.default_rng(seed)
+    x = np.zeros((inst.E, inst.P), dtype=bool)
+    for e in range(inst.E):
+        remaining = float(inst.R[e])
+        for p in rng.permutation(inst.P):
+            if inst.sm_r[p] <= remaining + 1e-12:
+                x[e, p] = True
+                remaining -= float(inst.sm_r[p])
+    elig = eligibility_np(inst) & x[inst.u_edge]
+    y = np.full(inst.U, -1, dtype=np.int64)
+    for u in range(inst.U):
+        opts = np.nonzero(elig[u])[0]
+        if opts.size:
+            y[u] = int(rng.choice(opts))
+    return x, y
+
+
+# ===========================================================================
+# JAX implementations — fixed-shape, masked, vmapped over edge clouds
+# ===========================================================================
+
+def _agp_one_edge(Q, umask, sm_r, R_e, max_iters):
+    """Greedy exact-marginal placement for a single edge (jnp, masked)."""
+    import jax
+    import jax.numpy as jnp
+
+    P = Q.shape[1]
+    Qe = Q * umask[:, None]  # zero out other edges' users
+
+    def cond(state):
+        _, _, _, _, done = state
+        return ~done
+
+    def body(state):
+        x_e, best, remaining, it, done = state
+        feasible = (~x_e) & (sm_r <= remaining + 1e-6)
+        any_feasible = feasible.any()
+        gains = jnp.maximum(Qe - best[:, None], 0.0).sum(axis=0)
+        gains = jnp.where(feasible, gains, -jnp.inf)
+        p_star = jnp.argmax(gains)
+        do = any_feasible & ~done
+        x_e = x_e.at[p_star].set(jnp.where(do, True, x_e[p_star]))
+        remaining = remaining - jnp.where(do, sm_r[p_star], 0.0)
+        best = jnp.where(do, jnp.maximum(best, Qe[:, p_star]), best)
+        it = it + 1
+        done = done | ~any_feasible | (it >= max_iters)
+        return x_e, best, remaining, it, done
+
+    U = Q.shape[0]
+    init = (jnp.zeros(P, bool), jnp.zeros(U, jnp.float32),
+            R_e.astype(jnp.float32), jnp.int32(0), jnp.bool_(False))
+    x_e, *_ = jax.lax.while_loop(cond, body, init)
+    return x_e
+
+
+def agp_place_jax(Q, elig, u_edge, sm_r, R, *, max_iters: int = 256):
+    """jit-able AGP over all edges. ``Q`` [U,P] float32 (pre-masked by
+    eligibility or not — it is re-masked here), returns x [E,P] bool."""
+    import jax
+    import jax.numpy as jnp
+
+    E = R.shape[0]
+    Qm = jnp.where(elig, Q, 0.0)
+    umask = (u_edge[None, :] == jnp.arange(E)[:, None]).astype(Qm.dtype)
+    fn = functools.partial(_agp_one_edge, Qm, sm_r=sm_r, max_iters=max_iters)
+    return jax.vmap(lambda m, r: fn(m, R_e=r))(umask, R)
+
+
+def _egp_one_edge(Q, umask, sm_service, sm_r, R_e, relevant, max_iters):
+    """Algorithm 3 for a single edge (jnp, masked)."""
+    import jax
+    import jax.numpy as jnp
+
+    U, P = Q.shape
+    Qe = Q * umask[:, None]
+    NEG = jnp.float32(-1e30)
+
+    def cond(state):
+        return ~state[-1]
+
+    def body(state):
+        x_e, v, considered, satisfied, remaining, it, done = state
+        cand = relevant & ~considered
+        any_cand = cand.any()
+        p_star = jnp.argmax(jnp.where(cand, v, NEG))
+        fits = sm_r[p_star] <= remaining + 1e-6
+        place = fits & any_cand & ~done
+        x_e = x_e.at[p_star].set(x_e[p_star] | place)
+        remaining = remaining - jnp.where(place, sm_r[p_star], 0.0)
+        # lines 15–16: re-score unconsidered siblings of s* over unsatisfied
+        q_star = Qe[:, p_star]
+        unsat = (umask > 0) & ~satisfied
+        diff = jnp.where(unsat[:, None], Q - q_star[:, None], 0.0).sum(axis=0)
+        sib = (sm_service == sm_service[p_star]) & ~considered \
+            & (jnp.arange(P) != p_star) & relevant
+        v = jnp.where(place & sib, diff, v)
+        satisfied = satisfied | (place & (umask > 0) & (q_star >= 1.0 - 1e-6))
+        considered = considered.at[p_star].set(considered[p_star] | any_cand)
+        it = it + 1
+        all_sat = (satisfied | (umask == 0)).all()
+        all_cons = (considered | ~relevant).all()
+        done = done | ~any_cand | (remaining <= 1e-6) | all_sat | all_cons \
+            | (it >= max_iters)
+        return x_e, v, considered, satisfied, remaining, it, done
+
+    v0 = Qe.sum(axis=0)
+    init = (jnp.zeros(P, bool), v0, jnp.zeros(P, bool), jnp.zeros(U, bool),
+            R_e.astype(jnp.float32), jnp.int32(0), jnp.bool_(False))
+    x_e, *_ = jax.lax.while_loop(cond, body, init)
+    return x_e
+
+
+def egp_place_jax(Q, elig, u_edge, u_service, sm_service, sm_r, R, n_services,
+                  *, max_iters: int = 512):
+    """jit-able EGP over all edges: returns x [E, P] bool."""
+    import jax
+    import jax.numpy as jnp
+
+    E = R.shape[0]
+    Qm = jnp.where(elig, Q, 0.0).astype(jnp.float32)
+    umask = (u_edge[None, :] == jnp.arange(E)[:, None]).astype(jnp.float32)
+    # relevant[e, p] ⇔ some user covered by e requests service of p
+    req = jnp.zeros((E, n_services), bool).at[u_edge, u_service].set(True)
+    relevant = req[:, sm_service]  # [E, P]
+
+    def run(m, r, rel):
+        return _egp_one_edge(Qm, m, sm_service, sm_r, r, rel, max_iters)
+
+    return jax.vmap(run)(umask, R, relevant)
+
+
+def place_and_schedule(inst: PIESInstance, algo: str = "egp", seed: int = 0,
+                       Q: Optional[np.ndarray] = None):
+    """Convenience host entry point: returns ``(x, y, objective_value)``."""
+    if Q is None:
+        Q = qos_matrix_np(inst)
+    if algo == "egp":
+        x = egp_np(inst, Q)
+    elif algo == "agp":
+        x = agp_np(inst, Q)
+    elif algo == "agp_literal":
+        x = agp_literal_np(inst, Q)
+    elif algo == "sck":
+        x = sck_np(inst, Q)
+    elif algo == "rnd":
+        x, y = rnd_np(inst, seed)
+        from .scheduling import schedule_value_np
+        return x, y, schedule_value_np(inst, y, Q)
+    elif algo == "opt":
+        from .opt import opt_np
+        x = opt_np(inst, Q)
+    else:
+        raise ValueError(f"unknown algorithm {algo!r}")
+    y, value = oms_np(inst, x, Q)
+    return x, y, value

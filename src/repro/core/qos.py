@@ -1,0 +1,96 @@
+"""Quality-of-Service model (Eqs. 1–6 of the paper), vectorized.
+
+The central object is the dense **QoS matrix** ``Q ∈ [0,1]^{U×P}`` with
+``Q[u, p] = Q(u, s_p, m_p)`` per Eq. (1): zero when user ``u`` did not
+request the service of model ``p``, otherwise the mean of the accuracy-
+satisfaction term (Eq. 2) and the delay-satisfaction term (Eq. 3), where
+the delay ``D`` (Eq. 4) is transmission (Eq. 5) + computation (Eq. 6)
+under even sharing of the covering edge cloud's capacities.
+
+Three implementations, one contract (tested against each other):
+
+* :func:`qos_matrix_np` — host NumPy (reference, feeds the exact solver);
+* :func:`qos_matrix_jnp` — jit-able jnp (feeds the JAX placement modules);
+* :mod:`repro.kernels.qos_matrix` — Pallas TPU kernel tiled over
+  (users × service-models) for the production control plane.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .instance import PIESInstance, JaxInstance
+
+__all__ = [
+    "accuracy_satisfaction_np",
+    "delay_np",
+    "delay_satisfaction_np",
+    "qos_matrix_np",
+    "eligibility_np",
+    "qos_matrix_jnp",
+    "eligibility_jnp",
+]
+
+
+# ===========================================================================
+# NumPy reference
+# ===========================================================================
+
+def accuracy_satisfaction_np(A: np.ndarray, alpha: np.ndarray) -> np.ndarray:
+    """Eq. (2): ``â_sm(u)`` — broadcasts ``A`` [P] against ``alpha`` [U]."""
+    diff = alpha[:, None] - A[None, :]
+    return np.where(diff <= 0.0, 1.0, np.maximum(0.0, 1.0 - diff))
+
+
+def delay_np(inst: PIESInstance) -> np.ndarray:
+    """Eq. (4)–(6): expected delay ``D_sm(u)`` as a [U, P] matrix."""
+    counts = inst.covered_counts()
+    share_k = counts[inst.u_edge] / inst.K[inst.u_edge]  # |U_e|/K_e
+    share_w = counts[inst.u_edge] / inst.W[inst.u_edge]  # |U_e|/W_e
+    return (
+        inst.sm_k[None, :] * share_k[:, None]
+        + inst.sm_w[None, :] * share_w[:, None]
+    )
+
+
+def delay_satisfaction_np(D: np.ndarray, delta: np.ndarray,
+                          delta_max: float) -> np.ndarray:
+    """Eq. (3): ``d̂_sm(u)`` from the delay matrix [U, P]."""
+    over = D - delta[:, None]
+    return np.where(over <= 0.0, 1.0, np.maximum(0.0, 1.0 - over / delta_max))
+
+
+def eligibility_np(inst: PIESInstance) -> np.ndarray:
+    """[U, P] bool — model ``p`` implements user ``u``'s requested service."""
+    return inst.u_service[:, None] == inst.sm_service[None, :]
+
+
+def qos_matrix_np(inst: PIESInstance) -> np.ndarray:
+    """Eq. (1): the dense QoS matrix ``Q`` [U, P], float64."""
+    a_hat = accuracy_satisfaction_np(inst.sm_acc, inst.u_alpha)
+    d_hat = delay_satisfaction_np(delay_np(inst), inst.u_delta, inst.delta_max)
+    return 0.5 * (a_hat + d_hat) * eligibility_np(inst)
+
+
+# ===========================================================================
+# jnp implementation (shape-polymorphic, jit-able)
+# ===========================================================================
+
+def qos_matrix_jnp(inst: JaxInstance):
+    """jnp twin of :func:`qos_matrix_np` over a :class:`JaxInstance`."""
+    import jax.numpy as jnp
+
+    adiff = inst.u_alpha[:, None] - inst.sm_acc[None, :]
+    a_hat = jnp.where(adiff <= 0.0, 1.0, jnp.maximum(0.0, 1.0 - adiff))
+    D = (
+        inst.sm_k[None, :] * inst.u_share_k[:, None]
+        + inst.sm_w[None, :] * inst.u_share_w[:, None]
+    )
+    over = D - inst.u_delta[:, None]
+    d_hat = jnp.where(over <= 0.0, 1.0,
+                      jnp.maximum(0.0, 1.0 - over / inst.delta_max))
+    elig = inst.u_service[:, None] == inst.sm_service[None, :]
+    return (0.5 * (a_hat + d_hat) * elig).astype(jnp.float32)
+
+
+def eligibility_jnp(inst: JaxInstance):
+    return inst.u_service[:, None] == inst.sm_service[None, :]

@@ -1,0 +1,4 @@
+from .compression import (topk_compress, int8_compress, ErrorFeedback,
+                          compressed_psum)
+from .elastic import (ClusterState, StragglerMonitor, plan_survivor_mesh,
+                      elastic_batch_plan, recovery_plan)

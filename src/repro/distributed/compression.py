@@ -1,0 +1,95 @@
+"""Gradient compression for cross-pod links (distributed-optimization tricks).
+
+The pod axis of the production mesh crosses DCN (slow inter-pod links);
+gradient all-reduce over it is the one collective that cannot be hidden at
+2+ pods. Two standard compressors, both stateless-in-jit with an explicit
+error-feedback carry (EF-SGD style — the compression residual is added back
+next step, preserving convergence):
+
+* **top-k sparsification** — keep the k largest-|g| entries per leaf;
+* **int8 quantization** — per-leaf symmetric scale with stochastic
+  rounding (unbiased).
+
+Use via ``make_train_step(..., grad_transform=compressor.transform)`` or
+wrap collectives directly with :func:`compressed_psum` inside shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["topk_compress", "int8_compress", "ErrorFeedback",
+           "compressed_psum"]
+
+
+def topk_compress(g, frac: float = 0.01):
+    """Zero all but the top ``frac`` fraction of entries by magnitude.
+    Returns (compressed, residual)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0).reshape(g.shape)
+    return kept, g - kept
+
+
+def int8_compress(g, key):
+    """Symmetric int8 quantization with stochastic rounding (unbiased).
+    Returns (dequantized, residual)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    x = g / scale
+    lo = jnp.floor(x)
+    p = x - lo
+    rnd = jax.random.uniform(key, g.shape)
+    q = jnp.clip(lo + (rnd < p), -127, 127).astype(jnp.int8)
+    deq = q.astype(g.dtype) * scale
+    return deq, g - deq
+
+
+@dataclasses.dataclass
+class ErrorFeedback:
+    """EF compressor: carry = what compression dropped last step."""
+
+    method: str = "topk"        # topk | int8
+    frac: float = 0.01
+    seed: int = 0
+
+    def init(self, grads):
+        return jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def transform(self, grads, carry):
+        """Returns (compressed_grads, new_carry)."""
+        key = jax.random.PRNGKey(self.seed)
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        carry_leaves = jax.tree_util.tree_leaves(carry)
+        outs, news = [], []
+        for i, (g, c) in enumerate(zip(leaves, carry_leaves)):
+            corrected = g.astype(jnp.float32) + c
+            if self.method == "topk":
+                kept, resid = topk_compress(corrected, self.frac)
+            elif self.method == "int8":
+                kept, resid = int8_compress(
+                    corrected, jax.random.fold_in(key, i))
+            else:
+                raise ValueError(self.method)
+            outs.append(kept.astype(g.dtype))
+            news.append(resid)
+        return (jax.tree_util.tree_unflatten(treedef, outs),
+                jax.tree_util.tree_unflatten(treedef, news))
+
+
+def compressed_psum(x, axis_name: str, key, *, method: str = "int8"):
+    """psum with pre-compression — for explicit shard_map cross-pod
+    reductions. Unbiased (stochastic rounding) so EF is optional here."""
+    if method == "int8":
+        compressed, _ = int8_compress(x, key)
+    elif method == "none":
+        compressed = x
+    else:
+        raise ValueError(method)
+    return jax.lax.psum(compressed, axis_name)

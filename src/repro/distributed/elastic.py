@@ -1,0 +1,113 @@
+"""Elastic runtime: failure handling, straggler mitigation, re-meshing.
+
+The control flow a 1000+-node deployment needs, exercised here on
+simulated topologies (the same code paths run with real
+``jax.distributed`` process sets on hardware):
+
+* **failure → survivor mesh** — given dead hosts, build the largest valid
+  (data × model) mesh from survivors (model axis preserved — TP groups are
+  intra-host-group; DP shrinks), restore the latest checkpoint *resharded*
+  onto it, and re-run PIES placement with the dead edge groups removed
+  (the paper's own optimizer is the service-level recovery mechanism).
+* **straggler mitigation** — per-step time EMA; hosts slower than
+  ``threshold ×`` median for ``patience`` consecutive steps are flagged
+  and either swapped with hot spares or evicted (shrinking DP), since a
+  single straggler gates every synchronous collective.
+* **elastic batch policy** — global batch is preserved under DP shrink by
+  raising grad-accumulation steps (keeps optimization semantics stable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["ClusterState", "StragglerMonitor", "plan_survivor_mesh",
+           "elastic_batch_plan"]
+
+
+@dataclasses.dataclass
+class ClusterState:
+    n_hosts: int
+    devices_per_host: int
+    failed_hosts: frozenset = frozenset()
+
+    @property
+    def alive(self) -> List[int]:
+        return [h for h in range(self.n_hosts) if h not in self.failed_hosts]
+
+    @property
+    def alive_devices(self) -> int:
+        return len(self.alive) * self.devices_per_host
+
+
+def plan_survivor_mesh(state: ClusterState, model_parallel: int = 16
+                       ) -> Tuple[int, int]:
+    """Largest (data, model) mesh on the survivors with the model axis
+    preserved. Returns (data, model); raises if TP can't be formed."""
+    dev = state.alive_devices
+    if dev < model_parallel:
+        raise RuntimeError(
+            f"only {dev} devices alive; cannot form model axis of "
+            f"{model_parallel}")
+    data = dev // model_parallel
+    # power-of-two DP keeps collective rings balanced
+    data = 1 << (data.bit_length() - 1)
+    return data, model_parallel
+
+
+def elastic_batch_plan(global_batch: int, old_data: int, new_data: int,
+                       old_accum: int = 1) -> int:
+    """Grad-accumulation steps that preserve the global batch when DP
+    shrinks (or grows)."""
+    per_replica = global_batch // (old_data * old_accum)
+    assert global_batch % (new_data * per_replica) == 0, \
+        "global batch not preservable; adjust batch or replicas"
+    return global_batch // (new_data * per_replica)
+
+
+class StragglerMonitor:
+    """Flags hosts whose step time exceeds ``threshold × median`` for
+    ``patience`` consecutive steps (EMA-smoothed)."""
+
+    def __init__(self, n_hosts: int, threshold: float = 1.5,
+                 patience: int = 3, ema: float = 0.5):
+        self.n_hosts = n_hosts
+        self.threshold = threshold
+        self.patience = patience
+        self.ema = ema
+        self._time: Optional[np.ndarray] = None
+        self._strikes = np.zeros(n_hosts, dtype=int)
+
+    def observe(self, step_times: Sequence[float]) -> List[int]:
+        """Per-host step durations → list of hosts to mitigate."""
+        t = np.asarray(step_times, dtype=float)
+        assert t.shape == (self.n_hosts,)
+        self._time = t if self._time is None else \
+            self.ema * t + (1 - self.ema) * self._time
+        med = np.median(self._time)
+        slow = self._time > self.threshold * med
+        self._strikes = np.where(slow, self._strikes + 1, 0)
+        return [int(h) for h in np.nonzero(
+            self._strikes >= self.patience)[0]]
+
+    def reset(self, host: int):
+        self._strikes[host] = 0
+
+
+def recovery_plan(state: ClusterState, *, model_parallel: int,
+                  global_batch: int, old_data: int,
+                  edge_of_host: Optional[Dict[int, int]] = None) -> Dict:
+    """One-call recovery: survivor mesh + batch plan + PIES edge removals.
+
+    ``edge_of_host`` maps hosts to the edge group (PIES edge cloud) they
+    serve; dead hosts ⇒ dead edge clouds ⇒ Router.handle_edge_failure.
+    """
+    data, model = plan_survivor_mesh(state, model_parallel)
+    accum = elastic_batch_plan(global_batch, old_data, data)
+    dead_edges = sorted({edge_of_host[h] for h in state.failed_hosts
+                         if edge_of_host and h in edge_of_host}) \
+        if edge_of_host else []
+    return {"mesh": (data, model), "grad_accum": accum,
+            "dead_edges": dead_edges}

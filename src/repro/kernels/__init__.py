@@ -1,0 +1,15 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot spots.
+
+Each kernel package: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd dispatcher; interpret-mode off-TPU), ref.py (pure-jnp oracle).
+
+* qos_matrix      — PIES control plane: tiled (users × implementations)
+                    QoS evaluation (the paper's Eq. 1–6 at fleet scale).
+* flash_attention — prefill/training attention, GQA-native, online softmax.
+* gqa_decode      — single-token decode vs KV cache (bandwidth-bound path).
+* ssd_scan        — Mamba2 SSD chunked scan (MXU-matmul reformulation).
+"""
+from .qos_matrix import ops as qos_ops
+from .flash_attention import ops as attention_ops
+from .gqa_decode import ops as decode_ops
+from .ssd_scan import ops as ssd_ops

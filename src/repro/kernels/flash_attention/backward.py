@@ -1,0 +1,179 @@
+"""Pallas TPU flash-attention backward (dq / dk / dv), GQA-native.
+
+Standard two-kernel FlashAttention-2 backward. The forward saves the
+per-row logsumexp ``L_i = m_i + log l_i`` so probabilities are recomputed
+tile-by-tile (never materializing S×S):
+
+    P_ij  = exp(S_ij − L_i)
+    D_i   = rowsum(dO_i ∘ O_i)                       (computed in jnp)
+    dV_j += P_ijᵀ dO_i
+    dS_ij = P_ij ∘ (dO_i V_jᵀ − D_i)
+    dQ_i += dS_ij K_j · scale        (kernel 1: grid q-outer, kv-inner)
+    dK_j += dS_ijᵀ Q_i · scale       (kernel 2: grid kv-outer, (g,q)-inner)
+
+GQA accumulation: kernel 2's grid is (B, Hkv, nk, G, nq) — the dk/dv
+output block index is constant over the two innermost axes, so the scratch
+accumulator integrates all G query heads of the group before writing.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mask(qpos, kpos, causal, window, seq_kv):
+    ok = kpos < seq_kv
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    return ok
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref, dq_ref,
+               acc_ref, *, scale, causal, window, kv_steps, block_q,
+               block_kv, seq_kv):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [bkv, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)        # [bq, hd]
+    lse = lse_ref[0, 0]                          # [bq, 1]
+    dsum = dsum_ref[0, 0]                        # [bq, 1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    p = jnp.where(_mask(qpos, kpos, causal, window, seq_kv),
+                  jnp.exp(s - lse), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dsum)
+    acc_ref[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(j == kv_steps - 1)
+    def _done():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *, scale, causal, window,
+                q_steps, groups, block_q, block_kv, seq_kv):
+    j = pl.program_id(2)        # kv block
+    g = pl.program_id(3)        # query head within the GQA group
+    i = pl.program_id(4)        # q block
+
+    @pl.when((g == 0) & (i == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [bkv, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    dsum = dsum_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    p = jnp.where(_mask(qpos, kpos, causal, window, seq_kv),
+                  jnp.exp(s - lse), 0.0)
+    # dV_j += P^T dO ;  dK_j += dS^T Q
+    dv_acc[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dsum)
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when((g == groups - 1) & (i == q_steps - 1))
+    def _done():
+        dk_ref[0, :, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, do, lse, *, causal: bool = True,
+                        window: int = 0, block_q: int = 512,
+                        block_kv: int = 512, interpret: bool = False):
+    """q: [B,Sq,Hq,hd]; k,v: [B,Skv,Hkv,hd]; o,do like q; lse: [B,Hq,Sq].
+    Returns (dq, dk, dv)."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    bq, bkv = min(block_q, Sq), min(block_kv, Skv)
+    nq, nk = pl.cdiv(Sq, bq), pl.cdiv(Skv, bkv)
+
+    def padseq(x, n):
+        return jnp.pad(x, ((0, 0), (0, n - x.shape[1]), (0, 0), (0, 0))) \
+            if n != x.shape[1] else x
+
+    qp = padseq(q, nq * bq).transpose(0, 2, 1, 3)      # [B,Hq,Sq,hd]
+    dop = padseq(do, nq * bq).transpose(0, 2, 1, 3)
+    op = padseq(o, nq * bq).transpose(0, 2, 1, 3)
+    kp, vp = padseq(k, nk * bkv), padseq(v, nk * bkv)
+    # pad lse with +inf ⇒ exp(s − inf) = 0 on padded rows
+    lsep = jnp.pad(lse, ((0, 0), (0, 0), (0, nq * bq - Sq)),
+                   constant_values=jnp.inf)[..., None]  # [B,Hq,Sq,1]
+    dsum = (op.astype(jnp.float32) * dop.astype(jnp.float32)) \
+        .sum(-1, keepdims=True)                        # [B,Hq,Sq,1]
+
+    qspec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0))
+    kvspec4 = pl.BlockSpec((1, bkv, 1, hd),
+                           lambda b, h, i, j: (b, j, h // G, 0))
+    rowspec = pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0))
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          window=window, kv_steps=nk, block_q=bq,
+                          block_kv=bkv, seq_kv=Skv),
+        grid=(B, Hq, nq, nk),
+        in_specs=[qspec, kvspec4, kvspec4, qspec, rowspec, rowspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, nq * bq, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, dsum)
+
+    # kernel 2: kv-outer, (g, q)-inner — GQA group accumulates in scratch
+    qspec5 = pl.BlockSpec((1, 1, bq, hd),
+                          lambda b, kh, j, g, i: (b, kh * G + g, i, 0))
+    kvspec5 = pl.BlockSpec((1, bkv, 1, hd),
+                           lambda b, kh, j, g, i: (b, j, kh, 0))
+    rowspec5 = pl.BlockSpec((1, 1, bq, 1),
+                            lambda b, kh, j, g, i: (b, kh * G + g, i, 0))
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          window=window, q_steps=nq, groups=G, block_q=bq,
+                          block_kv=bkv, seq_kv=Skv),
+        grid=(B, Hkv, nk, G, nq),
+        in_specs=[qspec5, kvspec5, kvspec5, qspec5, rowspec5, rowspec5],
+        out_specs=[kvspec5, kvspec5],
+        out_shape=[jax.ShapeDtypeStruct((B, nk * bkv, Hkv, hd), k.dtype),
+                   jax.ShapeDtypeStruct((B, nk * bkv, Hkv, hd), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bkv, hd), jnp.float32),
+                        pltpu.VMEM((bkv, hd), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, dsum)
+
+    return (dq.transpose(0, 2, 1, 3)[:, :Sq],
+            dk[:, :Skv], dv[:, :Skv])

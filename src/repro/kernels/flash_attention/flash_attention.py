@@ -1,0 +1,147 @@
+"""Pallas TPU flash attention (prefill/training fwd), GQA-native.
+
+Grid ``(B, Hq, nq, nk)`` — the last axis is innermost and sequential on
+TPU, so the online-softmax state (m, l, acc) lives in VMEM scratch across
+kv steps and the output tile is written once at the last step. GQA needs
+no KV expansion: the K/V BlockSpec index map sends query head ``h`` to KV
+head ``h // G``. Causal/sliding-window masks are computed from grid
+indices (no S×S mask in HBM), and fully-out-of-range tiles skip the MXU
+work via ``pl.when``.
+
+Default blocks (q=512, kv=512): q/k/v/out tiles ≈ 4·512·hd·2 B ≈ 512 KiB
+at hd=128, scratch ≈ 260 KiB — comfortably inside 16 MiB VMEM with room
+for double buffering; all matmul dims are multiples of 128 (MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+SAFE = -1e20
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref,
+                  acc_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  kv_steps: int, block_q: int, block_kv: int, seq_kv: int):
+    i = pl.program_id(2)            # q block
+    j = pl.program_id(3)            # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_first = i * block_q
+    kv_first = j * block_kv
+    # tile-level skip: entirely above the causal diagonal / past the window
+    needed = True
+    if causal:
+        needed = kv_first <= q_first + block_q - 1
+    if window:
+        needed = jnp.logical_and(
+            needed, kv_first + block_kv - 1 > q_first - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # [bq, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)     # [bkv, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = kv_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = kpos < seq_kv
+        if causal:
+            ok &= kpos <= qpos
+        if window:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok, s, NEG)
+
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        m_safe = jnp.maximum(m_new, SAFE)
+        p = jnp.exp(s - m_safe)
+        corr = jnp.exp(jnp.maximum(m_prev, SAFE) - m_safe) \
+            * (m_prev > NEG / 2).astype(jnp.float32)
+        l_new = l_prev * corr + p.sum(axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_prev * corr + pv
+
+    @pl.when(j == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        # logsumexp residual for the backward kernels (FlashAttention-2)
+        lse_ref[0, 0] = jnp.maximum(m_ref[...], SAFE) + jnp.log(l)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 512,
+                    block_kv: int = 512, interpret: bool = False,
+                    return_lse: bool = False):
+    """q: [B, Sq, Hq, hd]; k, v: [B, Skv, Hkv, hd] with Hq % Hkv == 0.
+    Positions are assumed contiguous from 0 (prefill). Returns
+    [B, Sq, Hq, hd] (and the [B, Hq, Sq] logsumexp when ``return_lse``).
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    bq, bkv = min(block_q, Sq), min(block_kv, Skv)
+    nq, nk = pl.cdiv(Sq, bq), pl.cdiv(Skv, bkv)
+
+    def padseq(x, n):
+        return jnp.pad(x, ((0, 0), (0, n - x.shape[1]), (0, 0), (0, 0))) \
+            if n != x.shape[1] else x
+
+    qp = padseq(q, nq * bq).transpose(0, 2, 1, 3)     # [B, Hq, Sq, hd]
+    kp = padseq(k, nk * bkv)                          # [B, Skv, Hkv, hd]
+    vp = padseq(v, nk * bkv)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, kv_steps=nk, block_q=bq, block_kv=bkv, seq_kv=Skv)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, bkv, 1, hd),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bkv, 1, hd),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, i, j: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, nq * bq, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, nq * bq, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    out = out.transpose(0, 2, 1, 3)[:, :Sq]
+    if return_lse:
+        return out, lse[..., 0][:, :, :Sq]
+    return out

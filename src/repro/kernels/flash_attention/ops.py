@@ -1,0 +1,55 @@
+"""Jit'd dispatcher for flash attention (Pallas on TPU, interpret off-TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_kv", "use_kernel"))
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, block_q: int = 512, block_kv: int = 512,
+              use_kernel: bool = True):
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    return flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv,
+        interpret=jax.default_backend() != "tpu")
+
+
+def make_trainable_attention(*, causal: bool = True, window: int = 0,
+                             block_q: int = 512, block_kv: int = 512,
+                             interpret=None):
+    """Differentiable flash attention: Pallas forward + Pallas backward via
+    custom_vjp (the training path on TPU). Softcap is fwd-only here."""
+    import jax as _jax
+    from .backward import flash_attention_bwd
+
+    itp = (_jax.default_backend() != "tpu") if interpret is None else interpret
+
+    @_jax.custom_vjp
+    def attn(q, k, v):
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=itp)
+
+    def fwd(q, k, v):
+        o, lse = flash_attention(q, k, v, causal=causal, window=window,
+                                 block_q=block_q, block_kv=block_kv,
+                                 interpret=itp, return_lse=True)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        return flash_attention_bwd(
+            q, k, v, o, do, lse, causal=causal, window=window,
+            block_q=block_q, block_kv=block_kv, interpret=itp)
+
+    attn.defvjp(fwd, bwd)
+    return attn

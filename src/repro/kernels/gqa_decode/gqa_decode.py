@@ -1,0 +1,118 @@
+"""Pallas TPU GQA decode attention (one query token vs a KV cache).
+
+Decode is HBM-bandwidth bound: the whole useful cache is read once per
+step. Grid ``(B, Hkv, nk)`` streams kv blocks innermost; the G query heads
+of a KV group attend together ([G, hd] query tile ⇒ the score matmul is
+[G, hd]×[hd, bkv] on the MXU). Online-softmax state lives in VMEM scratch;
+validity masking (cache length / sliding window / ring wrap) is computed
+from the per-row cache length carried in a [B, 1] SMEM-friendly tile.
+
+Block sizes: kv block 1024 at hd=128 ⇒ k+v tiles ≈ 512 KiB — sized to
+keep the streaming pipeline deep rather than for MXU occupancy (decode is
+a bandwidth workload; see EXPERIMENTS.md §Roofline decode rows).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+SAFE = -1e20
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, window: int, ring: bool,
+                   kv_steps: int, block_kv: int, cache_len: int,
+                   softcap: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)          # [bkv, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    kv_len = len_ref[0, 0]                          # valid entries (= pos+1)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    idx = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if ring:
+        # ring buffer of size cache_len: every slot valid once wrapped
+        ok = jnp.logical_or(idx < kv_len, kv_len > cache_len)
+    else:
+        ok = idx < kv_len
+        if window:
+            ok &= idx > kv_len - 1 - window
+    s = jnp.where(ok, s, NEG)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    m_safe = jnp.maximum(m_new, SAFE)
+    p = jnp.exp(s - m_safe)
+    corr = jnp.exp(jnp.maximum(m_prev, SAFE) - m_safe) \
+        * (m_prev > NEG / 2).astype(jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_prev * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == kv_steps - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def gqa_decode(q, k_cache, v_cache, kv_len, *, window: int = 0,
+               ring: bool = False, softcap: float = 0.0,
+               block_kv: int = 1024, interpret: bool = False):
+    """q: [B, Hq, hd]; k/v_cache: [B, Sc, Hkv, hd]; kv_len: [B] int32.
+    Returns [B, Hq, hd]."""
+    B, Hq, hd = q.shape
+    Sc, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    bkv = min(block_kv, Sc)
+    nk = pl.cdiv(Sc, bkv)
+    scale = 1.0 / math.sqrt(hd)
+
+    def padseq(x):
+        n = nk * bkv
+        return jnp.pad(x, ((0, 0), (0, n - x.shape[1]), (0, 0), (0, 0))) \
+            if n != x.shape[1] else x
+
+    qg = q.reshape(B, Hkv, G, hd)
+    kp, vp = padseq(k_cache), padseq(v_cache)
+    lens = kv_len.astype(jnp.int32).reshape(B, 1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, ring=ring,
+        kv_steps=nk, block_kv=bkv, cache_len=Sc, softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, bkv, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bkv, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kp, vp, lens)
+    return out.reshape(B, Hq, hd)

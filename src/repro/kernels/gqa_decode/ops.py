@@ -1,0 +1,22 @@
+"""Jit'd dispatcher for GQA decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .gqa_decode import gqa_decode
+from .ref import gqa_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "ring", "softcap", "block_kv", "use_kernel"))
+def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0,
+                     ring: bool = False, softcap: float = 0.0,
+                     block_kv: int = 1024, use_kernel: bool = True):
+    if not use_kernel:
+        return gqa_decode_ref(q, k_cache, v_cache, kv_len, window=window,
+                              ring=ring, softcap=softcap)
+    return gqa_decode(q, k_cache, v_cache, kv_len, window=window, ring=ring,
+                      softcap=softcap, block_kv=block_kv,
+                      interpret=jax.default_backend() != "tpu")

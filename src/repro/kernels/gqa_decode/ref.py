@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the GQA decode kernel (mirrors layers.decode_attention_jnp)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gqa_decode_ref(q, k_cache, v_cache, kv_len, *, window: int = 0,
+                   ring: bool = False, softcap: float = 0.0):
+    B, Hq, hd = q.shape
+    Sc, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    idx = jnp.arange(Sc)[None, :]
+    if ring:
+        ok = (idx < kv_len[:, None]) | (kv_len[:, None] > Sc)
+    else:
+        ok = idx < kv_len[:, None]
+        if window:
+            ok &= idx > (kv_len[:, None] - 1 - window)
+    s = jnp.where(ok[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, hd).astype(q.dtype)

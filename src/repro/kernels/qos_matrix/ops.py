@@ -1,0 +1,33 @@
+"""Jit'd dispatcher: Pallas on TPU, interpret-mode kernel or jnp elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .qos_matrix import qos_matrix_pallas
+from .ref import qos_matrix_ref
+
+
+@functools.partial(jax.jit, static_argnames=("delta_max", "use_kernel"))
+def qos_matrix(u_alpha, u_delta, u_share_k, u_share_w, u_service,
+               sm_acc, sm_k, sm_w, sm_service, *, delta_max: float,
+               use_kernel: bool = True):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel:
+        return qos_matrix_pallas(
+            u_alpha, u_delta, u_share_k, u_share_w, u_service,
+            sm_acc, sm_k, sm_w, sm_service, delta_max=delta_max,
+            interpret=not on_tpu)
+    return qos_matrix_ref(
+        u_alpha, u_delta, u_share_k, u_share_w, u_service,
+        sm_acc, sm_k, sm_w, sm_service, delta_max=delta_max)
+
+
+def qos_matrix_from_instance(jinst, use_kernel: bool = True):
+    """Convenience wrapper over a repro.core JaxInstance."""
+    return qos_matrix(
+        jinst.u_alpha, jinst.u_delta, jinst.u_share_k, jinst.u_share_w,
+        jinst.u_service, jinst.sm_acc, jinst.sm_k, jinst.sm_w,
+        jinst.sm_service, delta_max=float(jinst.delta_max),
+        use_kernel=use_kernel)

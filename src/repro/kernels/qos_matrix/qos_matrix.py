@@ -1,0 +1,80 @@
+"""Pallas TPU kernel for the PIES QoS matrix (Eqs. 1–6).
+
+At fleet scale the placement controller evaluates ``Q(u, s, m)`` for every
+(request × implementation) pair each control tick — U ~ 10⁶, P ~ 10³ — and
+this elementwise-broadcast evaluation is the control-plane hot spot. The
+kernel tiles (users × service-models) into VMEM blocks: per-user vectors
+arrive as [BU, 1] column tiles, per-model vectors as [1, BP] row tiles, and
+the [BU, BP] output tile is pure VPU work (compare/select/FMA — no MXU).
+
+Tile sizes default to (256, 256): (1 + 1 + out) tiles ≈ 256·256·4 B ≈
+260 KiB ≪ 16 MiB VMEM, and the lane dimension (BP) is a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qos_kernel(alpha_ref, delta_ref, sk_ref, sw_ref, us_ref,
+                acc_ref, k_ref, w_ref, ms_ref, out_ref, *, delta_max: float):
+    alpha = alpha_ref[...]          # [BU, 1]
+    delta = delta_ref[...]          # [BU, 1]
+    share_k = sk_ref[...]           # [BU, 1]  |U_e|/K_e gathered per user
+    share_w = sw_ref[...]           # [BU, 1]
+    uservc = us_ref[...]            # [BU, 1]  requested service id
+    acc = acc_ref[...]              # [1, BP]
+    kcost = k_ref[...]              # [1, BP]
+    wcost = w_ref[...]              # [1, BP]
+    msvc = ms_ref[...]              # [1, BP]  model's service id
+
+    # Eq. (2): accuracy satisfaction
+    adiff = alpha - acc
+    a_hat = jnp.where(adiff <= 0.0, 1.0, jnp.maximum(0.0, 1.0 - adiff))
+    # Eq. (4)–(6): delay under even sharing
+    d = kcost * share_k + wcost * share_w
+    over = d - delta
+    # Eq. (3): delay satisfaction
+    d_hat = jnp.where(over <= 0.0, 1.0,
+                      jnp.maximum(0.0, 1.0 - over / delta_max))
+    elig = (uservc == msvc).astype(a_hat.dtype)
+    out_ref[...] = 0.5 * (a_hat + d_hat) * elig
+
+
+def qos_matrix_pallas(u_alpha, u_delta, u_share_k, u_share_w, u_service,
+                      sm_acc, sm_k, sm_w, sm_service, *, delta_max: float,
+                      block_u: int = 256, block_p: int = 256,
+                      interpret: bool = False):
+    """Q [U, P] float32. Inputs are 1-D per-user / per-model vectors."""
+    U, Pn = u_alpha.shape[0], sm_acc.shape[0]
+    gu, gp = pl.cdiv(U, block_u), pl.cdiv(Pn, block_p)
+    Upad, Ppad = gu * block_u, gp * block_p
+
+    def pad(x, n):
+        return jnp.pad(x, (0, n - x.shape[0])) if n != x.shape[0] else x
+
+    ucol = lambda x: pad(x, Upad).reshape(Upad, 1)
+    prow = lambda x: pad(x, Ppad).reshape(1, Ppad)
+
+    f32 = jnp.float32
+    args = (
+        ucol(u_alpha.astype(f32)), ucol(u_delta.astype(f32)),
+        ucol(u_share_k.astype(f32)), ucol(u_share_w.astype(f32)),
+        ucol(u_service.astype(jnp.int32)),
+        prow(sm_acc.astype(f32)), prow(sm_k.astype(f32)),
+        prow(sm_w.astype(f32)), prow(sm_service.astype(jnp.int32)),
+    )
+    uspec = pl.BlockSpec((block_u, 1), lambda i, j: (i, 0))
+    pspec = pl.BlockSpec((1, block_p), lambda i, j: (0, j))
+    out = pl.pallas_call(
+        functools.partial(_qos_kernel, delta_max=float(delta_max)),
+        grid=(gu, gp),
+        in_specs=[uspec] * 5 + [pspec] * 4,
+        out_specs=pl.BlockSpec((block_u, block_p), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Upad, Ppad), f32),
+        interpret=interpret,
+    )(*args)
+    return out[:U, :Pn]

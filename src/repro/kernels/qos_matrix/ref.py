@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the QoS matrix kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qos_matrix_ref(u_alpha, u_delta, u_share_k, u_share_w, u_service,
+                   sm_acc, sm_k, sm_w, sm_service, *, delta_max: float):
+    f32 = jnp.float32
+    adiff = u_alpha.astype(f32)[:, None] - sm_acc.astype(f32)[None, :]
+    a_hat = jnp.where(adiff <= 0.0, 1.0, jnp.maximum(0.0, 1.0 - adiff))
+    d = (sm_k.astype(f32)[None, :] * u_share_k.astype(f32)[:, None]
+         + sm_w.astype(f32)[None, :] * u_share_w.astype(f32)[:, None])
+    over = d - u_delta.astype(f32)[:, None]
+    d_hat = jnp.where(over <= 0.0, 1.0,
+                      jnp.maximum(0.0, 1.0 - over / delta_max))
+    elig = (u_service[:, None] == sm_service[None, :]).astype(f32)
+    return 0.5 * (a_hat + d_hat) * elig

@@ -1,0 +1,26 @@
+"""Jit'd dispatcher for the SSD chunk scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan
+from .ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel"))
+def ssd(x, dtA, b, c, *, chunk: int = 256, use_kernel: bool = True):
+    if not use_kernel:
+        return ssd_scan_ref(x, dtA, b, c)
+    L = x.shape[1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y, st = ssd_scan(x, dtA, b, c, chunk=chunk,
+                     interpret=jax.default_backend() != "tpu")
+    return y[:, :L], st

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the SSD scan kernel: the naive recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dtA, b, c):
+    """Sequential reference: h ← h·exp(ΔA) + B ⊗ x; y = C·h.
+    x: [B, L, H, P]; dtA: [B, L, H]; b, c: [B, L, N]."""
+    Bsz, L, H, P = x.shape
+    N = b.shape[-1]
+
+    def step(state, t):
+        xt, at, bt, ct = t
+        state = state * jnp.exp(at)[..., None, None] \
+            + jnp.einsum("bn,bhp->bhpn", bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dtA.transpose(1, 0, 2).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32),
+          c.transpose(1, 0, 2).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final

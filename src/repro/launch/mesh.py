@@ -1,0 +1,42 @@
+"""Production mesh factory.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state. The dry-run entry point
+(launch/dryrun.py) sets ``XLA_FLAGS=--xla_force_host_platform_device_count
+=512`` *before* any jax import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target mesh: one v5e pod = (data=16, model=16) = 256 chips;
+    multi-pod = (pod=2, data=16, model=16) = 512 chips with pure-DP across
+    the `pod` axis (DCN-crossing collectives are gradient all-reduce only).
+    """
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: Optional[int] = None):
+    """A mesh over whatever devices actually exist (tests / examples)."""
+    import jax
+
+    n = len(jax.devices())
+    model = model or 1
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def batch_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def mesh_devices(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,218 @@
+"""Per-cell lowering specs: step fn + ShapeDtypeStruct inputs + shardings.
+
+``input_specs(arch, shape)`` follows the shannon/kernels pattern: weak-type
+correct, shardable stand-ins, zero device allocation. ``build_cell`` wraps
+them with the jitted step function for ``.lower().compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.layers import MeshContext
+from repro.training import (AdamWConfig, init_train_state, make_train_step,
+                            train_state_pspecs)
+from .shapes import SHAPES, ShapeCell, cell_plan
+
+__all__ = ["build_cell", "input_specs", "serving_config", "training_config"]
+
+#: per-arch optimizer-state dtype (memory fit policy; see EXPERIMENTS.md)
+OPT_STATE_DTYPE = {"qwen3_moe_235b": "bfloat16"}
+#: per-arch master-param dtype for training. 235B on a 256-chip v5e pod
+#: cannot hold f32 master + grads + Adam state in 16 GB/chip; bf16 master
+#: (Gopher-style, pair with stochastic rounding on real hardware) is the
+#: documented production trade-off. Everything else trains f32-master.
+TRAIN_PARAM_DTYPE = {"qwen3_moe_235b": "bfloat16"}
+
+
+def training_config(arch: str, tp: int) -> ModelConfig:
+    return get_config(arch, tp_shards=tp,
+                      param_dtype=TRAIN_PARAM_DTYPE.get(arch, "float32"),
+                      dtype="bfloat16", remat=True)
+
+
+def serving_config(arch: str, tp: int) -> ModelConfig:
+    return get_config(arch, tp_shards=tp, param_dtype="bfloat16",
+                      dtype="bfloat16", remat=False)
+
+
+def _sh(mesh, spec_tree):
+    """PartitionSpec tree → NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_struct(cfg: ModelConfig, cell: ShapeCell, baxes,
+                  with_targets: bool):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for a model input batch."""
+    B, S = cell.global_batch, cell.seq_len
+    i32, f32, act = jnp.int32, jnp.float32, jnp.dtype(cfg.dtype)
+    st, sp = {}, {}
+    if cfg.frontend == "audio":
+        st["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), act)
+        sp["frames"] = P(baxes, "model", None)
+    elif cfg.frontend == "vision":
+        nv = cfg.n_vision_tokens
+        st["patches"] = jax.ShapeDtypeStruct((B, nv, cfg.d_model), act)
+        sp["patches"] = P(baxes, "model", None)
+        st["tokens"] = jax.ShapeDtypeStruct((B, S - nv), i32)
+        sp["tokens"] = P(baxes, "model")
+    else:
+        st["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        sp["tokens"] = P(baxes, "model")
+    if with_targets:
+        st["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        sp["targets"] = P(baxes, "model")
+        st["mask"] = jax.ShapeDtypeStruct((B, S), f32)
+        sp["mask"] = P(baxes, "model")
+    return st, sp
+
+
+def _cache_struct(cfg: ModelConfig, B: int, S: int, baxes,
+                  shard_seq_cache: bool):
+    spec, ring = T.cache_spec(cfg, B, S)
+    struct = T.Cache(**{k: jax.ShapeDtypeStruct(s, jnp.dtype(d))
+                        for k, (s, d) in spec.items()})
+    # attention-free archs have zero-size kv buffers with degenerate head
+    # dims — leave those unsharded (they carry no bytes anyway)
+    kv_head_ax = "model" if spec["kv_k"][0][0] > 0 else None
+    if shard_seq_cache:  # batch too small to shard (long_500k): shard seq
+        pspecs = T.Cache(
+            kv_k=P(None, None, baxes, kv_head_ax, None),
+            kv_v=P(None, None, baxes, kv_head_ax, None),
+            conv=P(None, None, None, "model"),
+            ssm=P(None, None, "model", None, None),
+            pos=P(None),
+        )
+    else:
+        pspecs = T.Cache(
+            kv_k=P(None, baxes, None, kv_head_ax, None),
+            kv_v=P(None, baxes, None, kv_head_ax, None),
+            conv=P(None, baxes, None, "model"),
+            ssm=P(None, baxes, "model", None, None),
+            pos=P(baxes),
+        )
+    return struct, pspecs, ring
+
+
+def input_specs(arch: str, shape: str, multi_pod: bool = False,
+                tp: int = 16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cell = SHAPES[shape]
+    baxes = ("pod", "data") if multi_pod else ("data",)
+    if cell.kind == "train":
+        cfg = training_config(arch, tp)
+        st, sp = _batch_struct(cfg, cell, baxes, with_targets=True)
+        return {"batch": st, "batch_pspecs": sp, "config": cfg}
+    cfg = serving_config(arch, tp)
+    if cell.kind == "prefill":
+        st, sp = _batch_struct(cfg, cell, baxes, with_targets=False)
+        out = {"batch": st, "batch_pspecs": sp, "config": cfg}
+        if not cfg.encoder_only:
+            cs, cp, ring = _cache_struct(cfg, cell.global_batch, cell.seq_len,
+                                         baxes, shard_seq_cache=False)
+            out.update({"cache": cs, "cache_pspecs": cp, "ring": ring})
+        return out
+    # decode
+    shard_seq = cell.global_batch == 1
+    cs, cp, ring = _cache_struct(cfg, cell.global_batch, cell.seq_len,
+                                 baxes, shard_seq_cache=shard_seq)
+    tok = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
+    tok_sp = P(baxes) if not shard_seq else P(None)
+    return {"token": tok, "token_pspecs": tok_sp,
+            "cache": cs, "cache_pspecs": cp, "ring": ring, "config": cfg}
+
+
+def build_cell(arch: str, shape: str, mesh, multi_pod: bool):
+    """Returns (jitted_fn, args_structs, meta) ready for .lower(*args)."""
+    ok, why = cell_plan(arch, shape)
+    if not ok:
+        raise ValueError(f"cell ({arch}, {shape}) skipped: {why}")
+    cell = SHAPES[shape]
+    baxes = ("pod", "data") if multi_pod else ("data",)
+    tp = mesh.shape["model"]
+    import os
+    sp = os.environ.get("REPRO_SP", "0") == "1"
+    ctx = MeshContext(mesh, baxes, sp_matmuls=sp)
+
+    def fsdp(spec_tree):
+        # multi-pod: FSDP (ZeRO-3) spans the whole DP domain (pod × data)
+        return T.retarget_fsdp(spec_tree, baxes) if multi_pod else spec_tree
+
+    if cell.kind == "train":
+        cfg = training_config(arch, tp)
+        opt_cfg = AdamWConfig(state_dtype=OPT_STATE_DTYPE.get(arch, "float32"))
+        step = make_train_step(cfg, opt_cfg, ctx)
+        state_struct = jax.eval_shape(
+            lambda: init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0)))
+        state_sp = fsdp(train_state_pspecs(cfg))
+        bst, bsp = _batch_struct(cfg, cell, baxes, with_targets=True)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_sh(mesh, state_sp), _sh(mesh, bsp)),
+            out_shardings=(_sh(mesh, state_sp), None),
+            donate_argnums=(0,),
+        )
+        return jitted, (state_struct, bst), {"config": cfg, "kind": "train"}
+
+    cfg = serving_config(arch, tp)
+    params_struct = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    params_sp = fsdp(T.param_pspecs(cfg))
+
+    if cell.kind == "prefill":
+        bst, bsp = _batch_struct(cfg, cell, baxes, with_targets=False)
+        if cfg.encoder_only:
+            def encode(params, batch):
+                x = T.forward(params, cfg, batch, ctx)
+                return T.logits_fn(params, cfg, x, ctx)
+            jitted = jax.jit(
+                encode,
+                in_shardings=(_sh(mesh, params_sp), _sh(mesh, bsp)),
+                out_shardings=_sh(mesh, P(baxes, "model", None)),
+            )
+            return jitted, (params_struct, bst), {"config": cfg,
+                                                  "kind": "encode"}
+        cs, cp, ring = _cache_struct(cfg, cell.global_batch, cell.seq_len,
+                                     baxes, shard_seq_cache=False)
+
+        def prefill_fn(params, batch, cache):
+            return T.prefill(params, cfg, batch, cache, ring, ctx)
+
+        jitted = jax.jit(
+            prefill_fn,
+            in_shardings=(_sh(mesh, params_sp), _sh(mesh, bsp), _sh(mesh, cp)),
+            out_shardings=(_sh(mesh, P(baxes, "model")), _sh(mesh, cp)),
+            donate_argnums=(2,),
+        )
+        return jitted, (params_struct, bst, cs), {"config": cfg,
+                                                  "kind": "prefill"}
+
+    # decode
+    shard_seq = cell.global_batch == 1
+    cs, cp, ring = _cache_struct(cfg, cell.global_batch, cell.seq_len,
+                                 baxes, shard_seq_cache=shard_seq)
+    tok_sp = P(baxes) if not shard_seq else P(None)
+    logits_sp = P(baxes, "model") if not shard_seq else P(None, "model")
+
+    def decode_fn(params, token, cache):
+        return T.decode_step(params, cfg, token, cache, ring, ctx)
+
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(_sh(mesh, params_sp), _sh(mesh, tok_sp), _sh(mesh, cp)),
+        out_shardings=(_sh(mesh, logits_sp), _sh(mesh, cp)),
+        donate_argnums=(2,),
+    )
+    tok = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
+    return jitted, (params_struct, tok, cs), {"config": cfg, "kind": "decode"}

@@ -1,0 +1,8 @@
+"""repro.models — the EI service implementations (data plane)."""
+from .config import ModelConfig, plan_gqa_padding, GQAPadding
+from . import layers, transformer
+from .layers import MeshContext
+from .transformer import (
+    init_params, param_pspecs, forward, loss_fn, prefill, decode_step,
+    init_cache, cache_spec, cache_pspecs, Cache, logits_fn,
+)

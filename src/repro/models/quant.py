@@ -1,0 +1,97 @@
+"""Weight-only int8 quantization — implementation variants for PIES.
+
+The paper's core premise is that one service has *multiple implementations
+with different cost/QoS trade-offs*. Quantization manufactures exactly
+that: every architecture yields an int8 variant with ~2× smaller storage
+(= the paper's ``r_sm``), faster weight transfer/load, and a small
+accuracy delta — a second point on the accuracy/cost frontier from the
+same checkpoint.
+
+Per-output-channel symmetric int8:
+
+    w_q[o, :] = round(w[o, :] / s_o),  s_o = max|w[o, :]| / 127
+
+Storage is int8 + one f32 scale per output channel; serving dequantizes at
+load (bf16 compute — weight-only quantization, the standard LLM serving
+recipe). ``agreement`` measures top-1 logit agreement vs the bf16 model on
+probe prompts, which the catalog uses to derive the variant's ``A_sm``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["quantize_tree", "dequantize_tree", "quantized_bytes",
+           "logit_agreement"]
+
+#: leaves smaller than this stay unquantized (norm scales, biases)
+_MIN_SIZE = 4096
+
+
+def _quantize_leaf(w):
+    if w.ndim < 2 or w.size < _MIN_SIZE or not jnp.issubdtype(
+            w.dtype, jnp.floating):
+        return w, None
+    wf = w.astype(jnp.float32)
+    # per-leading-channel scales over all remaining axes
+    axes = tuple(range(1, w.ndim))
+    s = jnp.max(jnp.abs(wf), axis=axes, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(wf / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def quantize_tree(params) -> Tuple[Any, Any]:
+    """Returns (quantized_tree, scales_tree). Unquantized leaves have a
+    ``None`` scale and pass through unchanged."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    qs, ss = [], []
+    for w in leaves:
+        q, s = _quantize_leaf(w)
+        qs.append(q)
+        ss.append(s)
+    return (jax.tree_util.tree_unflatten(treedef, qs),
+            jax.tree_util.tree_unflatten(treedef, ss))
+
+
+def dequantize_tree(qtree, stree, dtype=jnp.bfloat16):
+    """Rebuild compute weights (bf16) from the int8 storage form."""
+    def deq(q, s):
+        if s is None:
+            return q
+        return (q.astype(jnp.float32) * s).astype(dtype)
+
+    return jax.tree_util.tree_map(
+        deq, qtree, stree,
+        is_leaf=lambda x: x is None or hasattr(x, "dtype"))
+
+
+def quantized_bytes(qtree, stree) -> int:
+    """Storage footprint of the quantized form (int8 + scales)."""
+    total = 0
+    for q, s in zip(jax.tree_util.tree_leaves(qtree),
+                    jax.tree_util.tree_leaves(stree, is_leaf=lambda x: x is None)):
+        total += q.size * q.dtype.itemsize
+        if s is not None:
+            total += s.size * 4
+    return total
+
+
+def logit_agreement(cfg, params_ref, params_q, n_probes: int = 8,
+                    seq: int = 32, seed: int = 0) -> float:
+    """Top-1 next-token agreement between the reference and quantized
+    models on random probe prompts — the accuracy-delta proxy the serving
+    catalog uses for the variant's A_sm."""
+    from repro.models import transformer as T
+
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (n_probes, seq)))
+    batch = {"tokens": toks}
+    xr = T.forward(params_ref, cfg, batch, None)
+    xq = T.forward(params_q, cfg, batch, None)
+    lr = T.logits_fn(params_ref, cfg, xr, None)[..., : cfg.vocab_size]
+    lq = T.logits_fn(params_q, cfg, xq, None)[..., : cfg.vocab_size]
+    return float((jnp.argmax(lr, -1) == jnp.argmax(lq, -1)).mean())

@@ -1,0 +1,8 @@
+"""repro.serving — the EI serving control+data plane (paper's system)."""
+from .catalog import (Catalog, ServiceModel, default_catalog,
+                      with_quantized_variants)
+from .router import Router, RoutingDecision
+from .engine import ModelServer, Request
+from .cluster import EdgeCluster, ServeReport
+from .scheduler import (ArrivingRequest, ContinuousScheduler,
+                        ExecutorProfile, simulate)

@@ -1,0 +1,97 @@
+"""Serving data plane: batched prefill+decode executors per implementation.
+
+One :class:`ModelServer` wraps a loaded architecture (params + jitted
+prefill/decode at fixed batch/seq buckets — shapes are bucketed so the jit
+cache stays small). The engine measures wall-clock latency per batch; the
+cluster layer (cluster.py) converts measured latency + catalog accuracy
+into realized QoS via the paper's Eq. (1)–(3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+__all__ = ["Request", "BatchResult", "ModelServer"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    service: str
+    tokens: np.ndarray           # prompt tokens (LM) / frames (audio)
+    max_new_tokens: int = 8
+    alpha: float = 0.0           # accuracy threshold
+    delta: float = 1.0           # delay threshold (seconds)
+    submitted_at: float = 0.0
+
+
+@dataclasses.dataclass
+class BatchResult:
+    uids: List[int]
+    outputs: np.ndarray          # [b, new_tokens]
+    latency_s: float             # wall time for the whole batch
+    prefill_s: float
+    decode_s: float
+
+
+class ModelServer:
+    """A resident service implementation: params + compiled step functions."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *, bucket_batch: int = 4,
+                 bucket_seq: int = 64, seed: int = 0):
+        self.cfg = cfg
+        self.bucket_batch = bucket_batch
+        self.bucket_seq = bucket_seq
+        self.params = params if params is not None else T.init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+        self._cache_shape: Optional[Tuple[int, int]] = None
+
+    # --- jitted step functions -------------------------------------------
+    def _prefill_impl(self, params, tokens, cache):
+        return T.prefill(params, self.cfg, {"tokens": tokens}, cache,
+                         self._ring)
+
+    def _decode_impl(self, params, tok, cache):
+        return T.decode_step(params, self.cfg, tok, cache, self._ring)
+
+    # --- public API ---------------------------------------------------------
+    def warmup(self):
+        toks = np.zeros((self.bucket_batch, self.bucket_seq // 2), np.int32)
+        self.generate(toks, n_steps=1)
+
+    def generate(self, prompts: np.ndarray, n_steps: int = 8) -> Tuple[np.ndarray, float, float]:
+        """prompts: [b, s] int32 (padded to bucket); returns
+        (new_tokens [b, n_steps], prefill_seconds, decode_seconds)."""
+        b, s = prompts.shape
+        bb = self.bucket_batch
+        assert b <= bb
+        pad_b, pad_s = bb - b, 0
+        toks = np.pad(prompts, ((0, pad_b), (0, pad_s))).astype(np.int32)
+
+        cache, ring = T.init_cache(self.cfg, bb, self.bucket_seq)
+        self._ring = ring
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+        outs = []
+        tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1)
+        for _ in range(n_steps):
+            outs.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, tok.astype(jnp.int32),
+                                         cache)
+            tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1)
+        tok.block_until_ready()
+        t2 = time.perf_counter()
+        new_tokens = np.stack(outs, axis=1)[:b]
+        return new_tokens, t1 - t0, t2 - t1

@@ -1,0 +1,94 @@
+"""QoS-aware request router — OMS (Alg. 1) as the serving control plane.
+
+The router owns the current placement ``x`` and, per control tick,
+(1) refreshes the QoS matrix for the live request batch (Pallas kernel
+when on TPU), (2) schedules each request onto the best placed
+implementation of its service, (3) reports per-request expected QoS and
+drop decisions. Placement refresh (EGP) runs on a slower timer or on
+topology events (see repro.distributed.elastic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (PIESInstance, egp_np, oms_np, qos_matrix_np,
+                        sigma_np)
+
+__all__ = ["Router", "RoutingDecision"]
+
+
+@dataclasses.dataclass
+class RoutingDecision:
+    assignment: np.ndarray    # [U] model index (−1 ⇒ drop to central cloud)
+    expected_qos: np.ndarray  # [U]
+    value: float              # Eq. (7) objective
+    placement: np.ndarray     # [E, P] current placement
+
+
+class Router:
+    """Stateful control plane: placement (slow path) + scheduling (fast)."""
+
+    def __init__(self, placement_algo: str = "egp", use_kernel: bool = False):
+        self.placement_algo = placement_algo
+        self.use_kernel = use_kernel
+        self._x: Optional[np.ndarray] = None
+
+    # --- slow path -------------------------------------------------------
+    def place(self, inst: PIESInstance) -> np.ndarray:
+        Q = self._qos(inst)
+        if self.placement_algo == "egp":
+            self._x = egp_np(inst, Q)
+        elif self.placement_algo == "agp":
+            from repro.core import agp_np
+            self._x = agp_np(inst, Q)
+        elif self.placement_algo == "opt":
+            from repro.core import opt_np
+            self._x = opt_np(inst, Q)
+        else:
+            raise ValueError(self.placement_algo)
+        return self._x
+
+    # --- fast path ---------------------------------------------------------
+    def route(self, inst: PIESInstance,
+              placement: Optional[np.ndarray] = None) -> RoutingDecision:
+        x = placement if placement is not None else self._x
+        assert x is not None, "call place() first"
+        Q = self._qos(inst)
+        y, value = oms_np(inst, x, Q)
+        served = y >= 0
+        qos = np.where(served, Q[np.arange(inst.U), np.maximum(y, 0)], 0.0)
+        return RoutingDecision(assignment=y, expected_qos=qos, value=value,
+                               placement=x)
+
+    def _qos(self, inst: PIESInstance) -> np.ndarray:
+        if self.use_kernel:
+            from repro.kernels.qos_matrix.ops import qos_matrix_from_instance
+            return np.asarray(
+                qos_matrix_from_instance(inst.as_jax())).astype(np.float64)
+        return qos_matrix_np(inst)
+
+    def handle_edge_failure(self, inst: PIESInstance,
+                            failed_edges) -> Tuple[PIESInstance, np.ndarray]:
+        """Elastic re-placement: users covered by failed edge clouds are
+        re-homed to surviving edges (round-robin by load) and placement is
+        recomputed on the survivors — the paper's placement problem as the
+        recovery mechanism."""
+        failed = set(int(e) for e in np.atleast_1d(failed_edges))
+        survivors = [e for e in range(inst.E) if e not in failed]
+        assert survivors, "no surviving edge clouds"
+        counts = {e: int((inst.u_edge == e).sum()) for e in survivors}
+        u_edge = inst.u_edge.copy()
+        for u in np.nonzero(np.isin(inst.u_edge, list(failed)))[0]:
+            tgt = min(counts, key=counts.get)
+            u_edge[u] = tgt
+            counts[tgt] += 1
+        R = inst.R.copy()
+        R[list(failed)] = 0.0  # nothing can be placed on a dead edge
+        new = dataclasses.replace(inst, u_edge=u_edge, R=R)
+        new.validate()
+        x = self.place(new)
+        assert not x[list(failed)].any()
+        return new, x

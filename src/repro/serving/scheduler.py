@@ -1,0 +1,178 @@
+"""Continuous batching with QoS-aware admission — the serving fast path.
+
+The paper schedules each request once (OMS); a production engine must also
+decide *when* requests run: they arrive over time, batch slots free up as
+sequences finish, and delay satisfaction (Eq. 3) decays while a request
+queues. This module adds an event-driven continuous-batching simulator on
+top of the PIES assignment:
+
+* requests are routed to an implementation by OMS (the paper's Alg. 1);
+* each (edge, implementation) executor runs a rolling batch: finished
+  sequences release their slot immediately (continuous batching, vLLM
+  style) instead of waiting for the whole batch (static batching);
+* the queue is ordered by an **earliest-deadline-first** key derived from
+  the request's delay threshold δ_u — the QoS-aware policy — or FCFS for
+  the baseline;
+* per-implementation latency comes from the catalog profile
+  (prefill ∝ prompt tokens, decode ∝ steps, both scaled by comp_cost).
+
+Everything is a deterministic discrete-event simulation (no wall clock),
+so policies are comparable and unit-testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.instance import PIESInstance
+from repro.core.qos import accuracy_satisfaction_np
+
+__all__ = ["ArrivingRequest", "ExecutorProfile", "ContinuousScheduler",
+           "simulate"]
+
+
+@dataclasses.dataclass
+class ArrivingRequest:
+    uid: int
+    impl: int                 # service model index (from OMS routing)
+    edge: int
+    arrival: float            # seconds
+    prompt_tokens: int
+    new_tokens: int
+    alpha: float
+    delta: float              # delay threshold (seconds)
+    accuracy: float           # A_sm of the scheduled implementation
+
+    # simulation state
+    start: float = -1.0
+    finish: float = -1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorProfile:
+    """Latency model of one implementation on one edge group."""
+    prefill_per_token_s: float    # seconds per prompt token (batched)
+    decode_per_step_s: float      # seconds per generated token (batched)
+    max_batch: int = 8
+
+    @classmethod
+    def from_comp_cost(cls, comp_cost: float, max_batch: int = 8):
+        # comp_cost ≈ active GFLOPs/token; v5e-ish effective 50 GFLOP/s/req
+        per_tok = comp_cost / 50.0 * 1e-3
+        return cls(prefill_per_token_s=per_tok,
+                   decode_per_step_s=per_tok * 3.0, max_batch=max_batch)
+
+
+class _Executor:
+    """One (edge, impl) continuous-batching executor (discrete-event)."""
+
+    def __init__(self, profile: ExecutorProfile, policy: str):
+        self.profile = profile
+        self.policy = policy
+        self.queue: List[Tuple[float, int, ArrivingRequest]] = []
+        self.running: List[Tuple[float, ArrivingRequest]] = []  # (finish, r)
+
+    def _key(self, r: ArrivingRequest) -> float:
+        if self.policy == "edf":
+            return r.arrival + r.delta     # absolute deadline
+        return r.arrival                   # FCFS
+
+    def submit(self, r: ArrivingRequest):
+        heapq.heappush(self.queue, (self._key(r), r.uid, r))
+
+    def step(self, now: float) -> Optional[float]:
+        """Admit queued work into free slots; return next event time."""
+        self.running = [(f, r) for f, r in self.running if f > now]
+        while self.queue and len(self.running) < self.profile.max_batch:
+            _, _, r = heapq.heappop(self.queue)
+            r.start = now
+            dur = (r.prompt_tokens * self.profile.prefill_per_token_s
+                   + r.new_tokens * self.profile.decode_per_step_s)
+            # batch contention: effective slowdown grows with occupancy
+            dur *= 1.0 + 0.15 * len(self.running)
+            r.finish = now + dur
+            heapq.heappush(self.running, (r.finish, r))
+        if self.running:
+            return self.running[0][0]
+        return None
+
+
+class ContinuousScheduler:
+    def __init__(self, profiles: Dict[Tuple[int, int], ExecutorProfile],
+                 policy: str = "edf"):
+        self.executors = {key: _Executor(p, policy)
+                          for key, p in profiles.items()}
+
+    def run(self, requests: List[ArrivingRequest]) -> List[ArrivingRequest]:
+        """Event loop: arrivals + completion ticks, until drained."""
+        events: List[Tuple[float, int, Tuple]] = []
+        seq = 0
+        for r in requests:
+            seq += 1
+            heapq.heappush(events, (r.arrival, seq, ("arrive", r)))
+        while events:
+            now, _, (kind, payload) = heapq.heappop(events)
+            if kind == "arrive":
+                key = (payload.edge, payload.impl)
+                self.executors[key].submit(payload)
+            else:
+                key = payload
+            nxt = self.executors[key].step(now)
+            if nxt is not None and nxt > now:
+                seq += 1
+                heapq.heappush(events, (nxt, seq, ("tick", key)))
+        return requests
+
+
+def simulate(inst: PIESInstance, assignment: np.ndarray, comp_cost,
+             *, policy: str = "edf", arrival_rate: float = 20.0,
+             prompt_tokens: int = 128, new_tokens: int = 32,
+             max_batch: int = 8, seed: int = 0,
+             delta_max: Optional[float] = None) -> Dict[str, float]:
+    """Simulate serving the routed requests; return realized-QoS stats.
+
+    assignment: [U] implementation index per user (−1 = dropped).
+    comp_cost: [P] per-implementation compute cost (catalog w_sm).
+    """
+    rng = np.random.default_rng(seed)
+    delta_max = delta_max or inst.delta_max
+    profiles: Dict[Tuple[int, int], ExecutorProfile] = {}
+    reqs: List[ArrivingRequest] = []
+    t = 0.0
+    for u in range(inst.U):
+        t += rng.exponential(1.0 / arrival_rate)
+        p = int(assignment[u])
+        if p < 0:
+            continue
+        e = int(inst.u_edge[u])
+        profiles.setdefault(
+            (e, p), ExecutorProfile.from_comp_cost(float(comp_cost[p]),
+                                                   max_batch))
+        reqs.append(ArrivingRequest(
+            uid=u, impl=p, edge=e, arrival=t,
+            prompt_tokens=prompt_tokens, new_tokens=new_tokens,
+            alpha=float(inst.u_alpha[u]), delta=float(inst.u_delta[u]),
+            accuracy=float(inst.sm_acc[p])))
+
+    sched = ContinuousScheduler(profiles, policy)
+    sched.run(reqs)
+
+    qos, misses = [], 0
+    for r in reqs:
+        latency = max(r.finish - r.arrival, 0.0)
+        a_hat = float(accuracy_satisfaction_np(
+            np.array([r.accuracy]), np.array([r.alpha]))[0, 0])
+        over = latency - r.delta
+        d_hat = 1.0 if over <= 0 else max(0.0, 1.0 - over / delta_max)
+        if over > 0:
+            misses += 1
+        qos.append(0.5 * (a_hat + d_hat))
+    return {
+        "mean_qos": float(np.mean(qos)) if qos else 0.0,
+        "p10_qos": float(np.percentile(qos, 10)) if qos else 0.0,
+        "deadline_misses": misses,
+        "served": len(reqs),
+    }

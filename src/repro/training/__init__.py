@@ -1,0 +1,3 @@
+"""repro.training — optimizer, trainer, losses."""
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update, adamw_state_pspecs, lr_schedule, global_norm
+from .trainer import TrainState, init_train_state, train_state_pspecs, make_train_step

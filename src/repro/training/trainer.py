@@ -1,0 +1,96 @@
+"""Training step factory: mixed precision, grad accumulation, remat, and
+optional gradient compression hooks (see repro.distributed.compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.layers import MeshContext
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key) -> TrainState:
+    params = T.init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg))
+
+
+def train_state_pspecs(cfg: ModelConfig) -> TrainState:
+    from .optimizer import adamw_state_pspecs
+    pspecs = T.param_pspecs(cfg)
+    return TrainState(params=pspecs, opt=adamw_state_pspecs(pspecs))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    ctx: Optional[MeshContext] = None,
+                    grad_accum: int = 1,
+                    grad_transform: Optional[Callable] = None):
+    """Build a jit-able ``train_step(state, batch) -> (state, metrics)``.
+
+    ``grad_accum > 1`` scans microbatches (the per-microbatch gradient
+    reduce-scatter overlaps the next microbatch's compute under XLA's
+    latency-hiding scheduler — the standard comm/compute overlap trick).
+    ``grad_transform`` hooks gradient compression (top-k / int8) before the
+    optimizer; see repro.distributed.compression.
+    """
+
+    def loss_of(params, batch):
+        return T.loss_fn(params, cfg, batch, ctx)
+
+    def step(state: TrainState, batch: Dict[str, Any]):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+        else:
+            def micro(i, carry):
+                loss_acc, grads_acc = carry
+                mb = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // grad_accum),
+                        x.shape[0] // grad_accum, axis=0), batch)
+                l, g = jax.value_and_grad(loss_of)(state.params, mb)
+                return (loss_acc + l,
+                        jax.tree_util.tree_map(jnp.add, grads_acc, g))
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            loss, grads = jax.lax.fori_loop(
+                0, grad_accum, micro, (jnp.zeros((), jnp.float32), zeros))
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return step
+
+
+def make_grad_and_apply(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                        ctx: Optional[MeshContext] = None):
+    """Split step for host-side gradient-compression loops:
+    ``grad_fn(params, batch) -> (loss, grads)`` and
+    ``apply_fn(grads, state) -> (state, metrics)`` — compression (with its
+    error-feedback carry) runs between the two, outside the fused step."""
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch, ctx))(params)
+
+    def apply_fn(grads, state: TrainState):
+        new_params, new_opt, metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg)
+        return TrainState(new_params, new_opt), metrics
+
+    return grad_fn, apply_fn

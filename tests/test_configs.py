@@ -1,0 +1,98 @@
+"""Config-zoo invariants: every assigned arch must be production-mesh
+compatible (TP=16 padding plans, divisibility, parameter accounting)."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, ALIASES, get_config, get_smoke_config
+
+TP = 16
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_padding_plans_at_tp16(arch):
+    cfg = get_config(arch, tp_shards=TP)
+    # vocab pads to a shard multiple and never shrinks
+    assert cfg.vocab_pad % TP == 0 and cfg.vocab_pad >= cfg.vocab_size
+    assert cfg.vocab_pad - cfg.vocab_size < TP * 8
+    if cfg.d_ff:
+        assert cfg.d_ff_pad % TP == 0 and cfg.d_ff_pad >= cfg.d_ff
+    if cfg.n_heads:
+        p = cfg.gqa
+        assert p.n_q_pad % TP == 0 and p.n_kv_pad % TP == 0
+        assert p.n_q_pad * p.group >= 0
+        # every original query head placed exactly once
+        placed = sorted(q for q in p.q_slot_to_q if q >= 0)
+        assert placed == list(range(cfg.n_heads))
+    if cfg.uses_mamba:
+        # SSD heads and conv channels must shard over the model axis
+        assert cfg.ssm_heads % TP == 0
+        assert (cfg.d_inner + 2 * cfg.ssm_state) % TP == 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_published_shapes_match_assignment(arch):
+    """The exact figures from the assignment sheet."""
+    expect = {
+        "yi_34b": (60, 7168, 56, 8, 20480, 64000),
+        "smollm_360m": (32, 960, 15, 5, 2560, 49152),
+        "gemma2_27b": (46, 4608, 32, 16, 36864, 256000),
+        "command_r_35b": (40, 8192, 64, 8, 22528, 256000),
+        "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+        "zamba2_2p7b": (54, 2560, 32, 32, 10240, 32000),
+        "internvl2_1b": (24, 896, 14, 2, 4864, 151655),
+        "qwen3_moe_235b": (94, 4096, 64, 4, 1536, 151936),
+        "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "mamba2_2p7b": (64, 2560, 0, 0, 0, 50280),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect, f"{arch}: {got} != {expect}"
+    # family-specific extras
+    if arch == "qwen3_moe_235b":
+        assert (cfg.n_experts, cfg.top_k) == (128, 8)
+    if arch == "mixtral_8x7b":
+        assert (cfg.n_experts, cfg.top_k) == (8, 2)
+        assert set(cfg.layer_kinds) == {"swa"}
+    if arch == "zamba2_2p7b":
+        assert cfg.ssm_state == 64 and cfg.shared_attn_every > 0
+    if arch == "mamba2_2p7b":
+        assert cfg.ssm_state == 128 and not cfg.uses_attention
+    if arch == "gemma2_27b":
+        assert cfg.block_pattern == ("swa", "full")
+        assert cfg.logit_softcap and cfg.attn_softcap
+    if arch == "hubert_xlarge":
+        assert cfg.encoder_only and not cfg.causal
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_accounting(arch):
+    cfg = get_config(arch)
+    n = cfg.n_params
+    n_act = cfg.n_active_params
+    assert n > 0 and n_act > 0
+    if cfg.n_experts:
+        assert n_act < n, "MoE active params must be below total"
+    else:
+        assert n_act == n
+    # order-of-magnitude sanity against the arch names
+    expect_b = {"yi_34b": 34, "gemma2_27b": 27, "command_r_35b": 35,
+                "qwen3_moe_235b": 235, "mixtral_8x7b": 46,
+                "mamba2_2p7b": 2.7, "zamba2_2p7b": 2.7,
+                "smollm_360m": 0.36, "hubert_xlarge": 0.96,
+                "internvl2_1b": 0.65}[arch]
+    assert 0.5 * expect_b <= n / 1e9 <= 1.8 * expect_b, \
+        f"{arch}: {n/1e9:.2f}B params vs expected ~{expect_b}B"
+
+
+def test_aliases_cover_assignment_names():
+    for name in ["yi-34b", "smollm-360m", "gemma2-27b", "command-r-35b",
+                 "hubert-xlarge", "zamba2-2.7b", "internvl2-1b",
+                 "qwen3-moe-235b-a22b", "mixtral-8x7b", "mamba2-2.7b"]:
+        assert get_config(name).name  # resolvable via alias
+
+
+def test_smoke_configs_are_small():
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        assert cfg.n_params < 5e6, f"{arch} smoke config too big"

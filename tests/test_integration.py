@@ -1,0 +1,137 @@
+"""Integration tests: training loop end-to-end, checkpoint-resume equality,
+grad-accumulation equivalence, compression path, serving e2e (small)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.train import run_training
+
+
+def test_training_loss_decreases(tmp_path):
+    out = run_training(arch="smollm_360m", steps=25, global_batch=8,
+                       seq_len=64, verbose=False, seed=3)
+    losses = out["losses"]
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, \
+        f"no learning: {losses[:3]} → {losses[-3:]}"
+
+
+def test_checkpoint_resume_is_bitwise_identical(tmp_path):
+    """Crash/restart: 14 straight steps == 7 steps + restart + 7 steps.
+    Requires the seekable pipeline + full-state checkpointing."""
+    kw = dict(arch="smollm_360m", global_batch=4, seq_len=32, verbose=False,
+              seed=5, lr=1e-3, schedule_steps=14)  # same LR schedule in all runs
+    ref = run_training(steps=14, **kw)
+
+    d = tmp_path / "ckpt"
+    run_training(steps=7, checkpoint_dir=str(d), ckpt_every=7, **kw)
+    resumed = run_training(steps=14, checkpoint_dir=str(d), ckpt_every=7, **kw)
+    assert resumed["start_step"] == 7
+
+    ref_leaves = jax.tree_util.tree_leaves(ref["state"].params)
+    res_leaves = jax.tree_util.tree_leaves(resumed["state"].params)
+    for a, b in zip(ref_leaves, res_leaves):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_grad_accumulation_equivalence():
+    """grad_accum=2 must match grad_accum=1 on the same global batch
+    (uniform masks ⇒ microbatch-mean average == full-batch mean)."""
+    from repro.configs import get_smoke_config
+    from repro.data import TokenPipeline
+    from repro.training import (AdamWConfig, init_train_state,
+                                make_train_step)
+
+    cfg = get_smoke_config("smollm_360m")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    pipe = TokenPipeline(cfg, global_batch=8, seq_len=32, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+
+    s1 = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    s2 = jax.tree_util.tree_map(lambda x: x, s1)
+    step1 = jax.jit(make_train_step(cfg, opt, grad_accum=1))
+    step2 = jax.jit(make_train_step(cfg, opt, grad_accum=2))
+    s1, m1 = step1(s1, batch)
+    s2, m2 = step2(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    # bf16 accumulation-order noise is amplified by Adam's 1/(√v + ε) at
+    # step 1 (v ≈ 0): compare with an absolute tolerance of ~lr/100
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-3)
+
+
+@pytest.mark.parametrize("method", ["topk", "int8"])
+def test_training_with_compression_still_learns(method):
+    out = run_training(arch="smollm_360m", steps=20, global_batch=8,
+                       seq_len=48, compression=method, verbose=False, seed=7)
+    losses = out["losses"]
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+
+
+def test_training_on_host_mesh():
+    """Same loop through the sharded path (1-device mesh exercises the
+    with_sharding_constraint / shard_map code)."""
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(model=1)
+    out = run_training(arch="mixtral_8x7b", steps=6, global_batch=4,
+                       seq_len=32, verbose=False, mesh=mesh, seed=1)
+    assert np.isfinite(out["losses"]).all()
+
+
+def test_serving_end_to_end_small():
+    from repro.launch.serve import run_serving
+    report = run_serving(n_users=12, n_edges=2, max_new_tokens=2,
+                         verbose=False, seed=4)
+    assert report.served + report.dropped == 12
+    assert 0.0 <= report.mean_realized_qos <= 1.0
+    assert report.served > 0
+
+
+def test_training_with_sp_matmuls():
+    """Megatron-SP shard_map projection paths (sp_qkv/out/mlp + MoE
+    psum_scatter) — numerically sane on a host mesh."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.layers import MeshContext
+    from repro.configs import get_smoke_config
+    from repro.data import TokenPipeline
+    from repro.training import AdamWConfig, init_train_state, make_train_step
+
+    mesh = make_host_mesh(model=1)
+    ctx = MeshContext(mesh, ("data",), sp_matmuls=True)
+    cfg = get_smoke_config("mixtral_8x7b")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    pipe = TokenPipeline(cfg, global_batch=2, seq_len=32, seed=0)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt, ctx))
+    for i in range(3):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        state, m = step(state, batch)
+        assert np.isfinite(float(m["loss"]))
+
+
+def test_sp_matches_baseline_forward():
+    """SP projections must be numerically identical to the baseline path."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.layers import MeshContext
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+
+    mesh = make_host_mesh(model=1)
+    cfg = get_smoke_config("yi_34b").with_(dtype="float32", remat=False)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)))}
+    x_base = T.forward(params, cfg, batch,
+                       MeshContext(mesh, ("data",), sp_matmuls=False))
+    x_sp = T.forward(params, cfg, batch,
+                     MeshContext(mesh, ("data",), sp_matmuls=True))
+    np.testing.assert_allclose(np.asarray(x_base), np.asarray(x_sp),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,261 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles, sweeping
+shapes and dtypes (hypothesis + parametrized grids)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.qos_matrix.qos_matrix import qos_matrix_pallas
+from repro.kernels.qos_matrix.ref import qos_matrix_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gqa_decode.gqa_decode import gqa_decode
+from repro.kernels.gqa_decode.ref import gqa_decode_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+# ===========================================================================
+# qos_matrix
+# ===========================================================================
+
+def _qos_args(U, Pn, seed):
+    rng = np.random.default_rng(seed)
+    j = jnp.asarray
+    return dict(
+        u_alpha=j(rng.uniform(0, 1, U), jnp.float32),
+        u_delta=j(rng.uniform(0, 10, U), jnp.float32),
+        u_share_k=j(rng.uniform(0.01, 1, U), jnp.float32),
+        u_share_w=j(rng.uniform(0.01, 1, U), jnp.float32),
+        u_service=j(rng.integers(0, 7, U), jnp.int32),
+        sm_acc=j(rng.uniform(0, 1, Pn), jnp.float32),
+        sm_k=j(rng.uniform(1, 30, Pn), jnp.float32),
+        sm_w=j(rng.uniform(1, 30, Pn), jnp.float32),
+        sm_service=j(rng.integers(0, 7, Pn), jnp.int32),
+    )
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.integers(1, 600), st.integers(1, 300), st.integers(0, 99))
+def test_qos_matrix_kernel_shape_sweep(U, Pn, seed):
+    args = _qos_args(U, Pn, seed)
+    out = qos_matrix_pallas(*args.values(), delta_max=10.0,
+                            block_u=128, block_p=128, interpret=True)
+    ref = qos_matrix_ref(*args.values(), delta_max=10.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
+    assert out.shape == (U, Pn)
+
+
+def test_qos_matrix_kernel_matches_core_model():
+    from repro.core import synthetic_instance, qos_matrix_np
+    from repro.kernels.qos_matrix.ops import qos_matrix_from_instance
+    inst = synthetic_instance(257, seed=3)
+    Q = np.asarray(qos_matrix_from_instance(inst.as_jax()))
+    np.testing.assert_allclose(Q, qos_matrix_np(inst).astype(np.float32),
+                               atol=1e-5)
+
+
+# ===========================================================================
+# flash_attention
+# ===========================================================================
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 24, 0.0), (False, 0, 0.0), (True, 0, 50.0),
+])
+def test_flash_attention_kernel(dtype, causal, window, softcap):
+    rng = np.random.default_rng(0)
+    B, Sq, Hq, Hkv, hd = 2, 80, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=32, block_kv=32,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(1, 3), st.integers(17, 150), st.sampled_from([1, 2, 4]),
+       st.sampled_from([16, 32, 64]), st.integers(0, 99))
+def test_flash_attention_property_sweep(B, Sq, G, hd, seed):
+    rng = np.random.default_rng(seed)
+    Hkv = 2
+    Hq = Hkv * G
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_kv=48,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ===========================================================================
+# gqa_decode
+# ===========================================================================
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,ring", [(0, False), (16, False), (0, True)])
+def test_gqa_decode_kernel(dtype, window, ring):
+    rng = np.random.default_rng(1)
+    B, Hq, Hkv, hd, Sc = 3, 8, 2, 32, 96
+    q = jnp.asarray(rng.normal(size=(B, Hq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Sc, Hkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Sc, Hkv, hd)), dtype)
+    kv_len = jnp.asarray([3, 64, 200 if ring else 96])
+    out = gqa_decode(q, k, v, kv_len, window=window, ring=ring,
+                     block_kv=32, interpret=True)
+    ref = gqa_decode_ref(q, k, v, kv_len, window=window, ring=ring)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(1, 4), st.integers(2, 130), st.sampled_from([1, 4, 7]),
+       st.integers(0, 99))
+def test_gqa_decode_property_sweep(B, Sc, G, seed):
+    rng = np.random.default_rng(seed)
+    Hkv, hd = 2, 16
+    Hq = Hkv * G
+    q = jnp.asarray(rng.normal(size=(B, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sc, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sc, Hkv, hd)), jnp.float32)
+    kv_len = jnp.asarray(rng.integers(1, Sc + 1, B), jnp.int32)
+    out = gqa_decode(q, k, v, kv_len, block_kv=32, interpret=True)
+    ref = gqa_decode_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ===========================================================================
+# ssd_scan
+# ===========================================================================
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_scan_kernel(dtype, chunk):
+    rng = np.random.default_rng(2)
+    B, L, H, P, N = 2, 64, 3, 8, 16
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), dtype)
+    dtA = -jnp.asarray(rng.uniform(0.01, 0.4, size=(B, L, H)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, L, N)), dtype)
+    c = jnp.asarray(rng.normal(size=(B, L, N)), dtype)
+    y, st_ = ssd_scan(x, dtA, b, c, chunk=chunk, interpret=True)
+    yr, sr = ssd_scan_ref(x, dtA, b, c)
+    tol = 3e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(sr), atol=tol, rtol=tol)
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(1, 2), st.sampled_from([16, 48, 80]),
+       st.sampled_from([1, 5]), st.integers(0, 99))
+def test_ssd_scan_property_sweep(B, L, H, seed):
+    rng = np.random.default_rng(seed)
+    P, N, chunk = 4, 8, 16
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    dtA = -jnp.asarray(rng.uniform(0.01, 0.6, size=(B, L, H)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    y, st_ = ssd_scan(x, dtA, b, c, chunk=chunk, interpret=True)
+    yr, sr = ssd_scan_ref(x, dtA, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_ssd_kernel_matches_model_layer():
+    """Kernel agrees with the model's ssd_chunked implementation too."""
+    from repro.models.layers import ssd_chunked
+    rng = np.random.default_rng(5)
+    B, L, H, P, N = 1, 32, 2, 4, 8
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    dtA = -jnp.asarray(rng.uniform(0.01, 0.4, size=(B, L, H)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    y1, s1 = ssd_scan(x, dtA, b, c, chunk=8, interpret=True)
+    y2, s2 = ssd_chunked(x, dtA, b, c, chunk=8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4,
+                               rtol=2e-4)
+
+
+# ===========================================================================
+# flash_attention backward (custom VJP, Pallas fwd+bwd)
+# ===========================================================================
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+def test_flash_attention_backward_matches_autodiff(causal, window):
+    """Pallas dq/dk/dv (FlashAttention-2 backward) vs jax.grad of the
+    naive-softmax oracle."""
+    from repro.kernels.flash_attention.ops import make_trainable_attention
+
+    rng = np.random.default_rng(0)
+    B, Sq, Hq, Hkv, hd = 2, 64, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(B, Sq, Hq, hd)), jnp.float32)
+
+    attn = make_trainable_attention(causal=causal, window=window,
+                                    block_q=16, block_kv=16, interpret=True)
+    gk = jax.grad(lambda *a: (attn(*a) * w).sum(), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: (attention_ref(*a, causal=causal,
+                                            window=window) * w).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-4, rtol=3e-4)
+
+
+@settings(deadline=None, max_examples=5)
+@given(st.integers(1, 2), st.integers(20, 70), st.sampled_from([1, 2, 4]),
+       st.integers(0, 99))
+def test_flash_backward_property_sweep(B, Sq, G, seed):
+    from repro.kernels.flash_attention.ops import make_trainable_attention
+
+    rng = np.random.default_rng(seed)
+    Hkv, hd = 2, 16
+    Hq = Hkv * G
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), jnp.float32)
+    attn = make_trainable_attention(causal=True, block_q=16, block_kv=32,
+                                    interpret=True)
+    g = jax.grad(lambda *a: attn(*a).sum(), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: attention_ref(*a, causal=True).sum(),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_flash_forward_lse_residual():
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+
+    rng = np.random.default_rng(3)
+    B, S, Hq, Hkv, hd = 1, 48, 2, 1, 16
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    out, lse = flash_attention(q, k, v, causal=True, block_q=16,
+                               block_kv=16, interpret=True, return_lse=True)
+    # direct logsumexp of the masked scores
+    s = np.einsum("bqhd,bkhd->bhqk", np.asarray(q),
+                  np.repeat(np.asarray(k), 2, axis=2)) / np.sqrt(hd)
+    mask = np.tril(np.ones((S, S), bool))
+    s = np.where(mask[None, None], s, -np.inf)
+    ref = np.log(np.exp(s - s.max(-1, keepdims=True)).sum(-1)) \
+        + s.max(-1)[...]
+    np.testing.assert_allclose(np.asarray(lse), ref, atol=1e-4, rtol=1e-4)

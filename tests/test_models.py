@@ -1,0 +1,217 @@
+"""Model zoo tests: per-arch smoke, cache consistency, SSD correctness,
+flash-vs-naive attention, GQA padding plans."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import transformer as T
+from repro.models import layers as L
+from repro.models.config import plan_gqa_padding
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "audio":
+        return {"frames": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32),
+                "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+                "mask": jnp.ones((B, S))}
+    if cfg.frontend == "vision":
+        nv = cfg.n_vision_tokens
+        return {"patches": jnp.asarray(rng.normal(size=(B, nv, cfg.d_model)), jnp.float32),
+                "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S - nv))),
+                "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+                "mask": jnp.ones((B, S))}
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+            "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+            "mask": jnp.ones((B, S))}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_train_step(arch):
+    """Reduced config: one forward + loss on CPU, shapes + no NaNs."""
+    cfg = get_smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    x = T.forward(params, cfg, batch)
+    assert x.shape == (2, 32, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+    loss, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32)))) for g in flat)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if a != "hubert_xlarge"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced forward logits at the last position must equal
+    prefill(S−1) + one decode step — validates KV caches (incl. SWA ring
+    buffers), RoPE positions and Mamba2 state carry."""
+    cfg = get_smoke_config(arch).with_(dtype="float32", remat=False)
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S, seed=3)
+
+    x = T.forward(params, cfg, batch)
+    full_logits = T.logits_fn(params, cfg, x[:, -1:], None)[:, 0]
+
+    if cfg.frontend == "vision":
+        pre = {"patches": batch["patches"], "tokens": batch["tokens"][:, :-1]}
+        last_tok = batch["tokens"][:, -1]
+    else:
+        pre = {"tokens": batch["tokens"][:, :-1]}
+        last_tok = batch["tokens"][:, -1]
+    cache, ring = T.init_cache(cfg, B, S)
+    _, cache = T.prefill(params, cfg, pre, cache, ring)
+    dec_logits, _ = T.decode_step(params, cfg, last_tok, cache, ring)
+
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_chunked_matches_sequential():
+    """Chunked SSD (matmul form) == naive recurrence h ← h·exp(ΔA) + B⊗x."""
+    rng = np.random.default_rng(0)
+    b, l, h, p, n, chunk = 2, 64, 3, 8, 4, 16
+    X = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dtA = -jnp.asarray(rng.uniform(0.01, 0.5, size=(b, l, h)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+
+    Y, final = L.ssd_chunked(X, dtA, B, C, chunk)
+
+    state = np.zeros((b, h, p, n))
+    Yref = np.zeros((b, l, h, p))
+    for t in range(l):
+        decay = np.exp(np.asarray(dtA[:, t]))[:, :, None, None]
+        state = state * decay + np.einsum(
+            "bn,bhp->bhpn", np.asarray(B[:, t]), np.asarray(X[:, t]))
+        Yref[:, t] = np.einsum("bn,bhpn->bhp", np.asarray(C[:, t]), state)
+    np.testing.assert_allclose(np.asarray(Y), Yref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), state, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_chunked_initial_state_resume():
+    """Splitting a sequence across two ssd_chunked calls with state carry
+    equals one call over the full sequence."""
+    rng = np.random.default_rng(1)
+    b, l, h, p, n, chunk = 1, 64, 2, 4, 4, 8
+    X = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dtA = -jnp.asarray(rng.uniform(0.01, 0.5, size=(b, l, h)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    Y_full, final_full = L.ssd_chunked(X, dtA, B, C, chunk)
+    half = l // 2
+    Y1, s1 = L.ssd_chunked(X[:, :half], dtA[:, :half], B[:, :half], C[:, :half], chunk)
+    Y2, s2 = L.ssd_chunked(X[:, half:], dtA[:, half:], B[:, half:], C[:, half:],
+                           chunk, initial_state=s1)
+    np.testing.assert_allclose(np.asarray(Y_full[:, half:]), np.asarray(Y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(final_full), np.asarray(s2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def _naive_attention(q, k, v, causal, window):
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = np.einsum("bqkgh,bskh->bkgqs", np.asarray(q.reshape(B, Sq, Hkv, G, hd), np.float64),
+                  np.asarray(k, np.float64)) / np.sqrt(hd)
+    iq = np.arange(Sq)[:, None]
+    ik = np.arange(k.shape[1])[None, :]
+    ok = np.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= ik <= iq
+    if window:
+        ok &= ik > iq - window
+    s = np.where(ok[None, None, None], s, -np.inf)
+    s = s - s.max(-1, keepdims=True)
+    p = np.exp(s)
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("bkgqs,bskh->bkgqh", p, np.asarray(v, np.float64))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, hd)
+
+
+@pytest.mark.parametrize("causal,window,Sq", [
+    (True, 0, 48), (True, 16, 48), (False, 0, 40), (True, 0, 33),
+])
+def test_flash_attention_matches_naive(causal, window, Sq):
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, hd = 2, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sq, Hkv, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    out = L.flash_attention_jnp(q, k, v, pos, pos, causal=causal,
+                                window=window, attn_softcap=0.0,
+                                q_chunk=16, kv_chunk=16)
+    ref = _naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("nq,nkv,shards", [
+    (56, 8, 16), (15, 5, 16), (14, 2, 16), (64, 4, 16), (32, 16, 16),
+    (64, 8, 16), (32, 32, 16), (16, 16, 16), (32, 8, 16), (8, 2, 4),
+])
+def test_gqa_padding_plans(nq, nkv, shards):
+    p = plan_gqa_padding(nq, nkv, shards)
+    assert p.n_q_pad % shards == 0 and p.n_kv_pad % shards == 0
+    assert p.n_q_pad * p.n_kv >= p.n_q * p.n_kv  # sanity
+    # validation of head placement happens inside plan_gqa_padding
+
+
+def test_padded_attention_matches_unpadded():
+    """A model padded for TP=4 must produce the same logits as the logical
+    (unpadded) model when padded weight slots are mapped from the original
+    weights (§DESIGN.md sharding-divisibility padding)."""
+    base = get_smoke_config("yi_34b").with_(dtype="float32", remat=False,
+                                            n_heads=8, n_kv_heads=2, head_dim=16)
+    padded = base.with_(tp_shards=4)
+    pu, pp = base.gqa, padded.gqa
+    assert pu.is_identity and not pp.is_identity
+
+    params_u = T.init_params(base, jax.random.PRNGKey(0))
+    params_p = jax.tree_util.tree_map(lambda x: x, params_u)
+
+    def pad_layer(attn):
+        wq, wk, wv, wo = attn["wq"], attn["wk"], attn["wv"], attn["wo"]
+        L_, D, Hq, hd = wq.shape
+        nwq = jnp.zeros((L_, D, pp.n_q_pad, hd), wq.dtype)
+        nwo = jnp.zeros((L_, pp.n_q_pad, hd, wo.shape[-1]), wo.dtype)
+        for slot, orig in enumerate(pp.q_slot_to_q):
+            if orig >= 0:
+                nwq = nwq.at[:, :, slot].set(wq[:, :, orig])
+                nwo = nwo.at[:, slot].set(wo[:, orig])
+        nwk = jnp.zeros((L_, D, pp.n_kv_pad, hd), wk.dtype)
+        nwv = jnp.zeros((L_, D, pp.n_kv_pad, hd), wv.dtype)
+        for slot, orig in enumerate(pp.kv_slot_to_kv):
+            if orig >= 0:
+                nwk = nwk.at[:, :, slot].set(wk[:, :, orig])
+                nwv = nwv.at[:, :, slot].set(wv[:, :, orig])
+        return {"wq": nwq, "wk": nwk, "wv": nwv, "wo": nwo}
+
+    params_p["layers"] = dict(params_p["layers"])
+    params_p["layers"]["attn"] = pad_layer(params_u["layers"]["attn"])
+
+    batch = make_batch(base, B=2, S=16)
+    xu = T.forward(params_u, base, batch)
+    xp = T.forward(params_p, padded, batch)
+    np.testing.assert_allclose(np.asarray(xu), np.asarray(xp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_moe_routing_respects_topk_and_capacity():
+    cfg = get_smoke_config("mixtral_8x7b").with_(dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, cfg.d_model)),
+                    jnp.float32)
+    out = L.moe_block(params["layers"]["moe"],
+                      cfg, x, ctx=None) if False else None
+    # moe params are stacked [L, ...]; take layer 0
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"]["moe"])
+    out = L.moe_block(lp, cfg, x, ctx=None)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,147 @@
+"""Placement algorithm tests: feasibility, exactness, approximation, JAX parity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    agp_literal_np,
+    agp_np,
+    agp_place_jax,
+    brute_force_np,
+    egp_np,
+    egp_place_jax,
+    eligibility_jnp,
+    opt_np,
+    place_and_schedule,
+    qos_matrix_jnp,
+    qos_matrix_np,
+    rnd_np,
+    sck_np,
+    sigma_np,
+    synthetic_instance,
+    tiny_instance,
+)
+
+ALGOS = ["egp", "agp", "sck"]
+
+
+def _check_storage_feasible(inst, x):
+    """Constraint (7b)."""
+    used = (x * inst.sm_r[None, :]).sum(axis=1)
+    assert np.all(used <= inst.R + 1e-9), (used, inst.R)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000), st.sampled_from(ALGOS + ["rnd", "opt"]))
+def test_all_algorithms_storage_feasible(seed, algo):
+    inst = synthetic_instance(50, n_edges=4, n_services=15, seed=seed)
+    x, y, _ = place_and_schedule(inst, algo, seed=seed)
+    _check_storage_feasible(inst, x)
+    # constraint (7a)+(7c): schedule respects placement & service match
+    for u in range(inst.U):
+        if y[u] >= 0:
+            assert x[inst.u_edge[u], y[u]]
+            assert inst.sm_service[y[u]] == inst.u_service[u]
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 10_000))
+def test_opt_matches_brute_force(seed):
+    inst = tiny_instance(seed=seed, n_users=10, n_edges=2, n_services=4,
+                         max_impls=3)
+    Q = qos_matrix_np(inst)
+    _, v_bf = brute_force_np(inst, Q)
+    v_dp = sigma_np(inst, opt_np(inst, Q), Q)
+    np.testing.assert_allclose(v_dp, v_bf, atol=1e-9)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 10_000))
+def test_greedy_beats_submodular_bound(seed):
+    """AGP (monotone-submodular greedy under the partition matroid) must
+    achieve ≥ (1 − 1/e)·OPT; EGP matches it empirically (paper Fig. 3)."""
+    inst = synthetic_instance(30, n_edges=3, n_services=8, seed=seed)
+    Q = qos_matrix_np(inst)
+    v_opt = sigma_np(inst, opt_np(inst, Q), Q)
+    if v_opt < 1e-9:
+        return
+    bound = (1.0 - 1.0 / np.e) * v_opt
+    assert sigma_np(inst, agp_np(inst, Q), Q) >= bound - 1e-9
+    assert sigma_np(inst, egp_np(inst, Q), Q) >= bound - 1e-9
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 10_000))
+def test_agp_literal_equals_fast_agp_value(seed):
+    """The closed-form marginal is exactly σ(P∪{p}) − σ(P): both variants
+    make identical picks modulo ties, hence identical objective values."""
+    inst = synthetic_instance(16, n_edges=2, n_services=5, max_impls=3,
+                              seed=seed)
+    Q = qos_matrix_np(inst)
+    v_fast = sigma_np(inst, agp_np(inst, Q), Q)
+    v_lit = sigma_np(inst, agp_literal_np(inst, Q), Q)
+    np.testing.assert_allclose(v_fast, v_lit, atol=1e-9)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 10_000))
+def test_jax_placements_match_numpy(seed):
+    import jax.numpy as jnp
+
+    inst = synthetic_instance(40, n_edges=3, n_services=10, seed=seed)
+    Q = qos_matrix_np(inst)
+    ji = inst.as_jax()
+    Qj, elig = qos_matrix_jnp(ji), eligibility_jnp(ji)
+
+    x_agp = np.asarray(agp_place_jax(Qj, elig, ji.u_edge, ji.sm_r, ji.R))
+    x_egp = np.asarray(egp_place_jax(Qj, elig, ji.u_edge, ji.u_service,
+                                     ji.sm_service, ji.sm_r, ji.R,
+                                     n_services=inst.S))
+    np.testing.assert_allclose(
+        sigma_np(inst, x_agp, Q), sigma_np(inst, agp_np(inst, Q), Q), rtol=1e-5)
+    np.testing.assert_allclose(
+        sigma_np(inst, x_egp, Q), sigma_np(inst, egp_np(inst, Q), Q), rtol=1e-5)
+    _check_storage_feasible(inst, x_agp)
+    _check_storage_feasible(inst, x_egp)
+
+
+def test_jax_placements_jit_compile():
+    import jax, jax.numpy as jnp
+
+    inst = synthetic_instance(64, n_edges=4, seed=0)
+    ji = inst.as_jax()
+    Qj, elig = qos_matrix_jnp(ji), eligibility_jnp(ji)
+    f = jax.jit(lambda q, e: agp_place_jax(q, e, ji.u_edge, ji.sm_r, ji.R))
+    x1 = f(Qj, elig)
+    x2 = f(Qj, elig)
+    assert np.array_equal(np.asarray(x1), np.asarray(x2))
+
+
+def test_egp_uses_multiple_implementations_when_beneficial():
+    """Multi-implementation is the paper's point: a strict-accuracy user and
+    a tight-delay user of the same service should get *different* models."""
+    inst = synthetic_instance(2, n_edges=1, n_services=1, max_impls=1, seed=0)
+    # Overwrite: one service, two implementations — accurate-slow, fast-crude.
+    inst.sm_service = np.array([0, 0])
+    inst.sm_acc = np.array([0.99, 0.50])
+    inst.sm_k = np.array([1.0, 1.0])
+    inst.sm_w = np.array([400.0, 1.0])
+    inst.sm_r = np.array([5.0, 5.0])
+    inst.K = np.array([1000.0]); inst.W = np.array([100.0])
+    inst.R = np.array([10.0])  # room for both
+    inst.u_edge = np.array([0, 0]); inst.u_service = np.array([0, 0])
+    inst.u_alpha = np.array([0.99, 0.1])   # user 0 wants accuracy
+    inst.u_delta = np.array([10.0, 0.5])   # user 1 wants speed
+    Q = qos_matrix_np(inst)
+    x = egp_np(inst, Q)
+    assert x[0, 0] and x[0, 1], "both implementations should be placed"
+    from repro.core import oms_np
+    y, _ = oms_np(inst, x, Q)
+    assert y[0] == 0 and y[1] == 1, "users routed to different implementations"
+
+
+def test_rnd_deterministic_given_seed():
+    inst = synthetic_instance(30, seed=2)
+    x1, y1 = rnd_np(inst, seed=11)
+    x2, y2 = rnd_np(inst, seed=11)
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)

@@ -1,0 +1,87 @@
+"""Unit + property tests for the QoS model (Eqs. 1–6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PIESInstance,
+    accuracy_satisfaction_np,
+    delay_np,
+    delay_satisfaction_np,
+    eligibility_np,
+    qos_matrix_jnp,
+    qos_matrix_np,
+    synthetic_instance,
+)
+
+
+def test_accuracy_satisfaction_cases():
+    # Eq. (2): met threshold ⇒ 1; otherwise 1 − (α − A), floored at 0.
+    A = np.array([0.9, 0.5, 0.1])
+    alpha = np.array([0.6, 0.95])
+    a = accuracy_satisfaction_np(A, alpha)
+    assert a[0, 0] == 1.0                      # A=0.9 ≥ α=0.6
+    np.testing.assert_allclose(a[0, 1], 1 - (0.6 - 0.5))
+    np.testing.assert_allclose(a[1, 2], max(0.0, 1 - (0.95 - 0.1)))
+    np.testing.assert_allclose(a[1, 0], 1 - (0.95 - 0.9))
+
+
+def test_delay_satisfaction_cases():
+    # Eq. (3): within threshold ⇒ 1; else linear falloff over δ_max.
+    D = np.array([[1.0, 5.0, 40.0]])
+    delta = np.array([2.0])
+    d = delay_satisfaction_np(D, delta, delta_max=10.0)
+    assert d[0, 0] == 1.0
+    np.testing.assert_allclose(d[0, 1], 1 - (5.0 - 2.0) / 10.0)
+    assert d[0, 2] == 0.0  # overflow past δ_max clamps to 0
+
+
+def test_delay_even_sharing():
+    # Eq. (5)/(6): delay scales with |U_e| (even sharing of K_e, W_e).
+    def make(nu):
+        return PIESInstance(
+            K=np.array([100.0]), W=np.array([50.0]), R=np.array([10.0]),
+            sm_service=np.array([0]), sm_acc=np.array([0.8]),
+            sm_k=np.array([10.0]), sm_w=np.array([5.0]), sm_r=np.array([1.0]),
+            u_edge=np.zeros(nu, dtype=int), u_service=np.zeros(nu, dtype=int),
+            u_alpha=np.full(nu, 0.5), u_delta=np.full(nu, 1.0),
+        )
+    d1 = delay_np(make(1))[0, 0]
+    d4 = delay_np(make(4))[0, 0]
+    np.testing.assert_allclose(d1, 10.0 / 100.0 + 5.0 / 50.0)
+    np.testing.assert_allclose(d4, 4 * d1)
+
+
+def test_qos_zero_for_other_services():
+    inst = synthetic_instance(50, seed=0)
+    Q = qos_matrix_np(inst)
+    elig = eligibility_np(inst)
+    assert np.all(Q[~elig] == 0.0)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10_000), st.integers(1, 60))
+def test_qos_matrix_bounds_property(seed, n_users):
+    inst = synthetic_instance(n_users, n_edges=3, n_services=10, seed=seed)
+    Q = qos_matrix_np(inst)
+    assert Q.shape == (inst.U, inst.P)
+    assert np.all(Q >= 0.0) and np.all(Q <= 1.0)
+    assert np.all(np.isfinite(Q))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 10_000))
+def test_qos_jnp_matches_np(seed):
+    inst = synthetic_instance(40, n_edges=3, n_services=12, seed=seed)
+    Q = qos_matrix_np(inst)
+    Qj = np.asarray(qos_matrix_jnp(inst.as_jax()))
+    np.testing.assert_allclose(Qj, Q.astype(np.float32), atol=1e-5)
+
+
+def test_qos_monotone_in_accuracy():
+    # Holding everything fixed, a more accurate model never has lower QoS.
+    inst = synthetic_instance(30, seed=7)
+    Q = qos_matrix_np(inst)
+    inst2 = PIESInstance(**{**inst.__dict__, "sm_acc": np.minimum(inst.sm_acc + 0.1, 1.0)})
+    Q2 = qos_matrix_np(inst2)
+    assert np.all(Q2 >= Q - 1e-12)

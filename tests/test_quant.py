@@ -1,0 +1,78 @@
+"""Int8 implementation variants: roundtrip quality, storage accounting,
+and the PIES placement behavior they exist for."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.models.quant import (dequantize_tree, logit_agreement,
+                                quantize_tree, quantized_bytes)
+from repro.serving import Router, default_catalog, with_quantized_variants
+
+
+def test_quantization_roundtrip_error_bounded():
+    cfg = get_smoke_config("smollm_360m").with_(dtype="float32",
+                                                param_dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    q, s = quantize_tree(params)
+    deq = dequantize_tree(q, s, dtype=jnp.float32)
+    for a, b, sc in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(deq),
+                        jax.tree_util.tree_leaves(
+                            s, is_leaf=lambda x: x is None)):
+        if sc is None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            # per-channel int8: error ≤ scale/2 elementwise
+            err = np.abs(np.asarray(a, np.float64) - np.asarray(b, np.float64))
+            bound = np.broadcast_to(np.asarray(sc, np.float64) / 2 + 1e-8,
+                                    err.shape)
+            assert (err <= bound).all()
+
+
+def test_quantized_storage_halves():
+    cfg = get_smoke_config("yi_34b")
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    q, s = quantize_tree(params)
+    qb = quantized_bytes(q, s)
+    fb = sum(l.size * 2 for l in jax.tree_util.tree_leaves(params))  # bf16
+    assert qb < 0.62 * fb, (qb, fb)
+
+
+def test_quantized_model_agrees_with_reference():
+    cfg = get_smoke_config("smollm_360m").with_(dtype="float32",
+                                                param_dtype="float32")
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    q, s = quantize_tree(params)
+    deq = dequantize_tree(q, s, dtype=jnp.float32)
+    agree = logit_agreement(cfg, params, deq, n_probes=4, seq=16)
+    assert agree >= 0.75, f"int8 top-1 agreement too low: {agree}"
+
+
+def test_placement_prefers_int8_when_storage_tight():
+    """The paper's story end-to-end: under a tight storage budget EGP
+    places the cheaper int8 implementations; with slack it prefers the
+    higher-accuracy bf16 ones."""
+    cat = with_quantized_variants(default_catalog())
+    assert len(cat.models) == 2 * len(default_catalog().models)
+
+    router = Router("egp")
+
+    tight = cat.to_instance(150, 1, storage_capacity=45.0, seed=0)
+    x_tight = router.place(tight)
+    chosen_tight = {cat.models[p].arch for p in np.nonzero(x_tight[0])[0]}
+
+    loose = cat.to_instance(150, 1, storage_capacity=2000.0, seed=0)
+    x_loose = router.place(loose)
+
+    n_int8_tight = sum(1 for a in chosen_tight if a.endswith("-int8"))
+    assert n_int8_tight >= 1, f"tight budget should use int8: {chosen_tight}"
+    # with slack, the best bf16 implementations must be placed
+    chosen_loose = {cat.models[p].arch for p in np.nonzero(x_loose[0])[0]}
+    assert any(not a.endswith("-int8") for a in chosen_loose)
+    # and QoS never decreases with more storage
+    from repro.core import qos_matrix_np, sigma_np
+    v_tight = sigma_np(tight, x_tight, qos_matrix_np(tight))
+    v_loose = sigma_np(loose, x_loose, qos_matrix_np(loose))
+    assert v_loose >= v_tight - 1e-9

@@ -1,0 +1,249 @@
+"""Substrate tests: checkpointing (atomic/reshard), compression, elastic
+runtime, data pipeline determinism, serving control plane."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import RequestPipeline, TokenPipeline
+from repro.distributed import (ClusterState, ErrorFeedback, StragglerMonitor,
+                               elastic_batch_plan, int8_compress,
+                               plan_survivor_mesh, recovery_plan,
+                               topk_compress)
+from repro.serving import Router, default_catalog
+
+
+# ===========================================================================
+# checkpoint
+# ===========================================================================
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32),
+            "b": {"w": jnp.asarray(rng.normal(size=(4,)), jnp.bfloat16),
+                  "step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 100, tree)
+    assert latest_step(tmp_path) == 100
+    out = restore_checkpoint(tmp_path, 100, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(
+            np.asarray(a, dtype=np.float32), np.asarray(b, dtype=np.float32))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    tree = _tree()
+    for s in (10, 20, 30, 40):
+        save_checkpoint(tmp_path, s, tree, keep=2)
+    steps = sorted(p.name for p in Path(tmp_path).iterdir())
+    assert steps == ["step_000000030", "step_000000040"]
+    assert latest_step(tmp_path) == 40
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    tree = _tree()
+    path = save_checkpoint(tmp_path, 5, tree)
+    leaf = next(path.glob("leaf_*.npy"))
+    raw = bytearray(leaf.read_bytes())
+    raw[-1] ^= 0xFF
+    leaf.write_bytes(bytes(raw))
+    with pytest.raises(IOError):
+        restore_checkpoint(tmp_path, 5, tree)
+
+
+def test_checkpoint_atomicity_partial_write_ignored(tmp_path):
+    tree = _tree()
+    save_checkpoint(tmp_path, 1, tree)
+    # simulate a crash mid-write: tmp dir without manifest
+    crashed = Path(tmp_path) / "step_000000002.tmp-dead"
+    crashed.mkdir()
+    (crashed / "leaf_00000.npy").write_bytes(b"garbage")
+    assert latest_step(tmp_path) == 1  # partial write never visible
+
+
+def test_checkpoint_resharding_restore(tmp_path):
+    """Save replicated, restore sharded onto a different mesh layout —
+    elastic-scaling restore."""
+    devs = jax.devices()
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(tmp_path, 3, tree)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pspecs = {"w": jax.sharding.PartitionSpec("data", None)}
+    out = restore_checkpoint(tmp_path, 3, tree, mesh=mesh, pspecs=pspecs)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert isinstance(out["w"].sharding, jax.sharding.NamedSharding)
+
+
+def test_checkpoint_manager_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, every=5)
+    tree = _tree()
+    assert not mgr.maybe_save(3, tree)
+    assert mgr.maybe_save(5, tree)
+    mgr.wait()
+    step, restored = mgr.restore_latest(tree)
+    assert step == 5 and restored is not None
+
+
+# ===========================================================================
+# gradient compression
+# ===========================================================================
+
+def test_topk_keeps_largest():
+    g = jnp.asarray([0.1, -5.0, 0.2, 3.0, 0.0, -0.3])
+    kept, resid = topk_compress(g, frac=0.34)
+    np.testing.assert_allclose(np.asarray(kept),
+                               [0, -5.0, 0, 3.0, 0, 0], atol=1e-7)
+    np.testing.assert_allclose(np.asarray(kept + resid), np.asarray(g),
+                               atol=1e-7)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 1000))
+def test_int8_unbiased_and_bounded(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 64)
+    deqs = np.stack([np.asarray(int8_compress(g, k)[0]) for k in keys])
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    # stochastic rounding: mean error → 0, per-sample error ≤ 1 quantum
+    assert np.abs(deqs.mean(0) - np.asarray(g)).max() < scale
+    assert np.abs(deqs - np.asarray(g)[None]).max() <= scale * (1 + 1e-5)
+
+
+def test_error_feedback_preserves_signal():
+    """With EF, the *cumulative* applied update converges to the cumulative
+    gradient even under aggressive compression."""
+    ef = ErrorFeedback(method="topk", frac=0.25)
+    rng = np.random.default_rng(0)
+    g_total = np.zeros(64)
+    applied_total = np.zeros(64)
+    grads = {"w": jnp.zeros(64)}
+    carry = ef.init(grads)
+    for step in range(50):
+        g = rng.normal(size=64).astype(np.float32)
+        g_total += g
+        out, carry = ef.transform({"w": jnp.asarray(g)}, carry)
+        applied_total += np.asarray(out["w"])
+    resid = np.asarray(carry["w"])
+    np.testing.assert_allclose(applied_total + resid, g_total, atol=1e-3)
+
+
+# ===========================================================================
+# elastic runtime
+# ===========================================================================
+
+def test_survivor_mesh_plan():
+    st_ = ClusterState(n_hosts=8, devices_per_host=8,
+                       failed_hosts=frozenset({3}))
+    data, model = plan_survivor_mesh(st_, model_parallel=16)
+    assert model == 16 and data == 2  # 56 devices → 3 ⌊→⌋ 2 (pow2)
+
+
+def test_survivor_mesh_insufficient():
+    st_ = ClusterState(n_hosts=2, devices_per_host=4,
+                       failed_hosts=frozenset({0, 1}))
+    with pytest.raises(RuntimeError):
+        plan_survivor_mesh(st_, model_parallel=16)
+
+
+def test_elastic_batch_plan():
+    assert elastic_batch_plan(256, old_data=16, new_data=8) == 2
+    assert elastic_batch_plan(256, old_data=16, new_data=16) == 1
+
+
+def test_straggler_monitor_flags_persistent_only():
+    # ema=1.0 ⇒ no smoothing: a single fast step resets the strike count
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5, patience=3, ema=1.0)
+    fast = [1.0, 1.0, 1.0, 1.0]
+    slow = [1.0, 1.0, 1.0, 2.5]
+    assert mon.observe(slow) == []
+    assert mon.observe(fast) == []          # strike reset
+    for _ in range(2):
+        assert mon.observe(slow) == []
+    assert mon.observe(slow) == [3]          # 3 consecutive strikes
+
+    # smoothed monitor keeps striking through a single fast blip (EMA
+    # memory): strikes accumulate 1, 2, 3 → flagged on the third observe
+    mon2 = StragglerMonitor(n_hosts=4, threshold=1.5, patience=3, ema=0.5)
+    assert mon2.observe(slow) == []
+    assert mon2.observe(fast) == []   # EMA still 1.75 > 1.5×median: strike 2
+    assert mon2.observe(slow) == [3]  # strike 3 ⇒ flagged
+
+
+def test_recovery_plan_maps_edges():
+    st_ = ClusterState(n_hosts=4, devices_per_host=64,
+                       failed_hosts=frozenset({1}))
+    plan = recovery_plan(st_, model_parallel=16, global_batch=256,
+                         old_data=16, edge_of_host={0: 0, 1: 1, 2: 2, 3: 3})
+    assert plan["dead_edges"] == [1]
+    assert plan["mesh"][1] == 16
+
+
+# ===========================================================================
+# data pipeline
+# ===========================================================================
+
+def test_pipeline_deterministic_and_seekable():
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("smollm_360m")
+    pipe = TokenPipeline(cfg, global_batch=8, seq_len=32, seed=1)
+    b1 = pipe.batch_at(17)
+    b2 = pipe.batch_at(17)
+    for k in b1:
+        np.testing.assert_array_equal(b1[k], b2[k])
+    b3 = pipe.batch_at(18)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_pipeline_shard_partition():
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("smollm_360m")
+    pipe = TokenPipeline(cfg, global_batch=8, seq_len=16, seed=0)
+    b = pipe.batch_at(0)
+    parts = [pipe.shard(b, r, 4)["tokens"] for r in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), b["tokens"])
+
+
+# ===========================================================================
+# serving control plane
+# ===========================================================================
+
+def test_router_end_to_end_and_failure():
+    cat = default_catalog()
+    inst = cat.to_instance(60, 4, seed=2)
+    router = Router("egp")
+    x = router.place(inst)
+    d = router.route(inst)
+    # storage feasibility per edge
+    used = (x * inst.sm_r[None]).sum(1)
+    assert np.all(used <= inst.R + 1e-9)
+    # failure: no placement on dead edge; users re-homed
+    inst2, x2 = router.handle_edge_failure(inst, [1])
+    assert not x2[1].any()
+    assert not np.any(inst2.u_edge == 1)
+    d2 = router.route(inst2)
+    assert d2.value > 0
+
+
+def test_router_multi_implementation_routing():
+    """Requests with different thresholds land on different implementations
+    of the same service — the paper's core multi-implementation behavior."""
+    cat = default_catalog()
+    inst = cat.to_instance(200, 1, storage_capacity=1000.0, seed=3)
+    router = Router("egp")
+    router.place(inst)
+    d = router.route(inst)
+    chat_models = {i for i, m in enumerate(cat.models) if m.service == "chat"}
+    used = {int(a) for a in d.assignment if a >= 0} & chat_models
+    assert len(used) >= 2, "multiple chat implementations should serve"

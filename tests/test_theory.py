@@ -1,0 +1,104 @@
+"""Property tests for the paper's theory (Theorems 1 and 3)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PIESInstance,
+    opt_np,
+    qos_matrix_np,
+    sigma_np,
+    synthetic_instance,
+)
+
+
+def _sigma_of_set(inst, Q, placements):
+    """σ(P) for a set of (edge, model) pairs."""
+    x = np.zeros((inst.E, inst.P), dtype=bool)
+    for e, p in placements:
+        x[e, p] = True
+    return sigma_np(inst, x, Q)
+
+
+def _feasible_ground_set(inst):
+    out = []
+    for e in range(inst.E):
+        for p in range(inst.P):
+            if inst.sm_r[p] <= inst.R[e]:
+                out.append((e, p))
+    return out
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(0, 100_000))
+def test_sigma_monotone_increasing(seed):
+    """Theorem 3 (part 1): adding a placement never decreases σ."""
+    rng = np.random.default_rng(seed)
+    inst = synthetic_instance(20, n_edges=3, n_services=6, max_impls=3, seed=seed)
+    Q = qos_matrix_np(inst)
+    ground = _feasible_ground_set(inst)
+    A = [ground[i] for i in rng.choice(len(ground), size=min(6, len(ground)), replace=False)]
+    rest = [g for g in ground if g not in A]
+    if not rest:
+        return
+    p = rest[rng.integers(len(rest))]
+    assert _sigma_of_set(inst, Q, A + [p]) >= _sigma_of_set(inst, Q, A) - 1e-9
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(0, 100_000))
+def test_sigma_submodular(seed):
+    """Theorem 3 (part 2): σ(A∪{p}) − σ(A) ≥ σ(B∪{p}) − σ(B) for A ⊆ B."""
+    rng = np.random.default_rng(seed)
+    inst = synthetic_instance(20, n_edges=3, n_services=6, max_impls=3, seed=seed)
+    Q = qos_matrix_np(inst)
+    ground = _feasible_ground_set(inst)
+    nB = min(8, len(ground))
+    B_idx = rng.choice(len(ground), size=nB, replace=False)
+    B = [ground[i] for i in B_idx]
+    A = [B[i] for i in range(nB) if rng.random() < 0.5]  # A ⊆ B
+    rest = [g for g in ground if g not in B]
+    if not rest:
+        return
+    p = rest[rng.integers(len(rest))]
+    gain_A = _sigma_of_set(inst, Q, A + [p]) - _sigma_of_set(inst, Q, A)
+    gain_B = _sigma_of_set(inst, Q, B + [p]) - _sigma_of_set(inst, Q, B)
+    assert gain_A >= gain_B - 1e-9
+
+
+def _knapsack_dp(values, weights, cap):
+    dp = np.zeros(cap + 1)
+    for v, w in zip(values, weights):
+        if w <= cap:
+            dp[w:] = np.maximum(dp[w:], dp[:-w] + v)
+    return dp.max()
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    st.lists(st.tuples(st.integers(1, 8), st.integers(1, 10)), min_size=1, max_size=8),
+    st.integers(1, 30),
+)
+def test_knapsack_reduction(items, cap):
+    """Theorem 1: the PIES instance built from a 0/1-knapsack instance has
+    optimal σ equal to the knapsack optimum (v_i users per item, one edge,
+    R = C, relaxed thresholds ⇒ every served user contributes QoS 1)."""
+    values = [v for v, _ in items]
+    weights = [w for _, w in items]
+    n = len(items)
+    U = sum(values)
+    inst = PIESInstance(
+        K=np.array([1e12]), W=np.array([1e12]), R=np.array([float(cap)]),
+        sm_service=np.arange(n), sm_acc=np.ones(n),
+        sm_k=np.ones(n), sm_w=np.ones(n), sm_r=np.array(weights, float),
+        u_edge=np.zeros(U, dtype=int),
+        u_service=np.repeat(np.arange(n), values),
+        u_alpha=np.zeros(U),                       # α_u = 0 (relaxed)
+        u_delta=np.full(U, 10.0), delta_max=10.0,  # δ_u = δ_max (relaxed)
+    )
+    Q = qos_matrix_np(inst)
+    # relaxed thresholds ⇒ every eligible (u, p) pair has QoS exactly 1
+    assert np.all(Q[Q > 0] == 1.0)
+    x = opt_np(inst, Q)
+    np.testing.assert_allclose(
+        sigma_np(inst, x, Q), _knapsack_dp(values, weights, cap), atol=1e-9
+    )
