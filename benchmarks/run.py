@@ -23,7 +23,7 @@ def main() -> None:
     print("name,us_per_call,derived")
 
     from benchmarks import fig3_validation, fig4_scale, fig5_realworld
-    from benchmarks import kernels_micro, roofline
+    from benchmarks import kernels_micro, roofline, scenarios
 
     t0 = time.perf_counter()
     s3 = fig3_validation.run(trials=trials3, verbose=False,
@@ -48,6 +48,18 @@ def main() -> None:
     print(f"fig5_realworld,{dt:.0f},egp_mobilenet={mobile}/{total}"
           f";paper=exclusively_mobilenet"
           f";qos_egp={s5['mean_qos']['egp']:.3f}")
+
+    sc = scenarios.run(seeds=(0, 1) if not args.full else (0, 1, 2, 3),
+                       n_ticks=4 if not args.full else 8, verbose=False)
+    # us_per_call is the batched accelerator call itself (incl. compile),
+    # not the host-side validation loop scenarios.run also performs.
+    dt = sc["batched_s"] * 1e6 / sc["n_instances"]
+    dyn = sc["dynamic"]["flash_crowd"]
+    print(f"scenario_sweep,{dt:.0f},n={sc['n_instances']}"
+          f";scenarios={sc['n_scenarios']}"
+          f";max_abs_diff={sc['max_abs_diff']:.1e}"
+          f";host_us={sc['host_s'] * 1e6 / sc['n_instances']:.0f}"
+          f";hyst_minus_greedy={dyn['hysteresis'] - dyn['greedy']:.1f}")
 
     for name, us, derived in kernels_micro.run(verbose=False):
         print(f"kernel_{name},{us:.1f},{derived}")

@@ -11,6 +11,8 @@ from .instance import (
     realworld_instance,
     tiny_instance,
     REALWORLD_CATALOG,
+    draw_edge_capacities,
+    draw_service_catalog,
 )
 from .qos import (
     qos_matrix_np,
@@ -37,6 +39,7 @@ from .opt import opt_np, opt_edge_np, brute_force_np
 __all__ = [
     "PIESInstance", "JaxInstance", "synthetic_instance", "realworld_instance",
     "tiny_instance", "REALWORLD_CATALOG",
+    "draw_edge_capacities", "draw_service_catalog",
     "qos_matrix_np", "qos_matrix_jnp", "eligibility_np", "eligibility_jnp",
     "delay_np", "accuracy_satisfaction_np", "delay_satisfaction_np",
     "oms_np", "oms_jnp", "sigma_np", "sigma_jnp", "sigma_user_np",

@@ -19,13 +19,13 @@ tick, pays switching), ``hysteresis`` (ours).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
 from .instance import PIESInstance
 from .qos import qos_matrix_np
-from .placement import egp_np
+from .placement import FEASIBILITY_TOL, egp_np
 from .scheduling import sigma_np
 
 __all__ = ["DynamicPlacer", "evaluate_horizon"]
@@ -55,7 +55,7 @@ def _egp_with_bias(inst: PIESInstance, Q: np.ndarray,
             if not cand:
                 break
             p_star = max(cand, key=lambda p: (v[p], -p))
-            placed = inst.sm_r[p_star] <= remaining + 1e-12
+            placed = inst.sm_r[p_star] <= remaining + FEASIBILITY_TOL
             if placed:
                 x[e, p_star] = True
                 remaining -= float(inst.sm_r[p_star])
@@ -69,7 +69,7 @@ def _egp_with_bias(inst: PIESInstance, Q: np.ndarray,
                             + (bonus if resident[e, p] else 0.0)
                 satisfied |= Qe[:, p_star] >= 1.0 - 1e-9
             considered.add(p_star)
-            if remaining <= 1e-12 or satisfied.all() \
+            if remaining <= FEASIBILITY_TOL or satisfied.all() \
                     or len(considered) == len(v):
                 break
     return x
@@ -96,10 +96,20 @@ class DynamicPlacer:
         return x, value, loads
 
 
-def evaluate_horizon(instances: List[PIESInstance],
+def evaluate_horizon(instances: Union[str, List[PIESInstance]],
                      switching_cost: float = 2.0,
-                     stickiness: float = 3.0) -> Dict[str, float]:
-    """Total (QoS − switching) over a tick sequence for three policies."""
+                     stickiness: float = 3.0, *,
+                     seed: int = 0,
+                     n_ticks: Optional[int] = None) -> Dict[str, float]:
+    """Total (QoS − switching) over a tick sequence for three policies.
+
+    ``instances`` is either an explicit tick sequence or the name of a
+    registered :mod:`repro.workloads` scenario (``"flash_crowd"``, ...),
+    materialized with ``(seed, n_ticks)``.
+    """
+    if isinstance(instances, str):
+        from repro.workloads import horizon  # deferred: workloads uses core
+        instances = horizon(instances, seed=seed, n_ticks=n_ticks)
     Qs = [qos_matrix_np(i) for i in instances]
 
     # static: tick-0 placement forever

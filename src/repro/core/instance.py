@@ -28,6 +28,8 @@ __all__ = [
     "realworld_instance",
     "REALWORLD_CATALOG",
     "tiny_instance",
+    "draw_edge_capacities",
+    "draw_service_catalog",
 ]
 
 
@@ -163,6 +165,33 @@ _register_jax_instance()
 # Instance generators
 # ===========================================================================
 
+def draw_edge_capacities(rng: np.random.Generator, n_edges: int):
+    """§VI-B edge-cloud draws (the single source of the paper's ranges):
+    ``K_e, W_e ~ U{300..600}``, ``R_e ~ U{100..200}``. Returns (K, W, R)."""
+    K = rng.integers(300, 601, size=n_edges).astype(np.float64)
+    W = rng.integers(300, 601, size=n_edges).astype(np.float64)
+    R = rng.integers(100, 201, size=n_edges).astype(np.float64)
+    return K, W, R
+
+
+def draw_service_catalog(rng: np.random.Generator, n_services: int,
+                         max_impls: int):
+    """§VI-B service-model draws: ``U{1..max_impls}`` implementations per
+    service, ``k, w ~ U{15..30}``, ``r ~ U{10..20}``,
+    ``A ~ clip(N(0.65, 0.1), 0, 1)``.
+
+    Returns ``(sm_service, sm_acc, sm_k, sm_w, sm_r)``.
+    """
+    impls = rng.integers(1, max_impls + 1, size=n_services)
+    sm_service = np.repeat(np.arange(n_services), impls)
+    P = sm_service.shape[0]
+    sm_k = rng.integers(15, 31, size=P).astype(np.float64)
+    sm_w = rng.integers(15, 31, size=P).astype(np.float64)
+    sm_r = rng.integers(10, 21, size=P).astype(np.float64)
+    sm_acc = np.clip(rng.normal(0.65, 0.1, size=P), 0.0, 1.0)
+    return sm_service, sm_acc, sm_k, sm_w, sm_r
+
+
 def synthetic_instance(
     n_users: int,
     n_edges: int = 10,
@@ -187,17 +216,9 @@ def synthetic_instance(
     approximation-ratio regime (see EXPERIMENTS.md §Paper-validation).
     """
     rng = np.random.default_rng(seed)
-    K = rng.integers(300, 601, size=n_edges).astype(np.float64)
-    W = rng.integers(300, 601, size=n_edges).astype(np.float64)
-    R = rng.integers(100, 201, size=n_edges).astype(np.float64)
-
-    impls = rng.integers(1, max_impls + 1, size=n_services)
-    sm_service = np.repeat(np.arange(n_services), impls)
-    P = sm_service.shape[0]
-    sm_k = rng.integers(15, 31, size=P).astype(np.float64)
-    sm_w = rng.integers(15, 31, size=P).astype(np.float64)
-    sm_r = rng.integers(10, 21, size=P).astype(np.float64)
-    sm_acc = np.clip(rng.normal(0.65, 0.1, size=P), 0.0, 1.0)
+    K, W, R = draw_edge_capacities(rng, n_edges)
+    sm_service, sm_acc, sm_k, sm_w, sm_r = draw_service_catalog(
+        rng, n_services, max_impls)
 
     u_edge = rng.integers(0, n_edges, size=n_users)
     u_service = rng.integers(0, n_services, size=n_users)

@@ -31,9 +31,18 @@ from .qos import qos_matrix_np, eligibility_np
 from .scheduling import oms_np, sigma_np
 
 __all__ = [
+    "FEASIBILITY_TOL",
     "egp_np", "agp_np", "agp_literal_np", "sck_np", "rnd_np",
     "egp_place_jax", "agp_place_jax", "place_and_schedule",
 ]
+
+#: Shared feasibility slack for ``r_sm ≤ R̂`` checks. One constant for the
+#: host (float64) and JAX (float32) paths: 1e-6 is representable at float32
+#: resolution around typical storage magnitudes, so a boundary-cost model
+#: (``r_sm == R̂`` exactly) is accepted or rejected identically by
+#: :func:`agp_np` and :func:`_agp_one_edge` — they can never disagree on
+#: which placements are feasible.
+FEASIBILITY_TOL = 1e-6
 
 
 # ===========================================================================
@@ -76,7 +85,7 @@ def egp_np(inst: PIESInstance, Q: Optional[np.ndarray] = None) -> np.ndarray:
             if not cand:
                 break
             p_star = max(cand, key=lambda p: (v[p], -p))
-            placed = inst.sm_r[p_star] <= remaining + 1e-12
+            placed = inst.sm_r[p_star] <= remaining + FEASIBILITY_TOL
             if placed:
                 x[e, p_star] = True
                 remaining -= float(inst.sm_r[p_star])
@@ -93,7 +102,7 @@ def egp_np(inst: PIESInstance, Q: Optional[np.ndarray] = None) -> np.ndarray:
                 # lines 18–19: users fully satisfied by (s*, m*)
                 satisfied |= Qe[:, p_star] >= 1.0 - 1e-9
             considered.add(p_star)
-            if remaining <= 1e-12 or satisfied.all() or len(considered) == len(v):
+            if remaining <= FEASIBILITY_TOL or satisfied.all() or len(considered) == len(v):
                 break
     return x
 
@@ -120,7 +129,7 @@ def agp_np(inst: PIESInstance, Q: Optional[np.ndarray] = None) -> np.ndarray:
         remaining = float(inst.R[e])
         placed = np.zeros(inst.P, dtype=bool)
         while True:
-            feasible = (~placed) & (inst.sm_r <= remaining + 1e-12)
+            feasible = (~placed) & (inst.sm_r <= remaining + FEASIBILITY_TOL)
             if not feasible.any():
                 break
             if users.size:
@@ -149,7 +158,7 @@ def agp_literal_np(inst: PIESInstance,
         remaining = float(inst.R[e])
         placed = np.zeros(inst.P, dtype=bool)
         while True:
-            feasible = np.nonzero((~placed) & (inst.sm_r <= remaining + 1e-12))[0]
+            feasible = np.nonzero((~placed) & (inst.sm_r <= remaining + FEASIBILITY_TOL))[0]
             if feasible.size == 0:
                 break
             best_val, best_p = -np.inf, -1
@@ -226,7 +235,7 @@ def rnd_np(inst: PIESInstance, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     for e in range(inst.E):
         remaining = float(inst.R[e])
         for p in rng.permutation(inst.P):
-            if inst.sm_r[p] <= remaining + 1e-12:
+            if inst.sm_r[p] <= remaining + FEASIBILITY_TOL:
                 x[e, p] = True
                 remaining -= float(inst.sm_r[p])
     elig = eligibility_np(inst) & x[inst.u_edge]
@@ -256,7 +265,7 @@ def _agp_one_edge(Q, umask, sm_r, R_e, max_iters):
 
     def body(state):
         x_e, best, remaining, it, done = state
-        feasible = (~x_e) & (sm_r <= remaining + 1e-6)
+        feasible = (~x_e) & (sm_r <= remaining + FEASIBILITY_TOL)
         any_feasible = feasible.any()
         gains = jnp.maximum(Qe - best[:, None], 0.0).sum(axis=0)
         gains = jnp.where(feasible, gains, -jnp.inf)
@@ -306,7 +315,7 @@ def _egp_one_edge(Q, umask, sm_service, sm_r, R_e, relevant, max_iters):
         cand = relevant & ~considered
         any_cand = cand.any()
         p_star = jnp.argmax(jnp.where(cand, v, NEG))
-        fits = sm_r[p_star] <= remaining + 1e-6
+        fits = sm_r[p_star] <= remaining + FEASIBILITY_TOL
         place = fits & any_cand & ~done
         x_e = x_e.at[p_star].set(x_e[p_star] | place)
         remaining = remaining - jnp.where(place, sm_r[p_star], 0.0)

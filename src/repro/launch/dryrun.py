@@ -145,7 +145,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool, save: bool = True,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-        cost = dict(compiled.cost_analysis() or {})
+        # cost_analysis() returns a dict on recent jax, [dict] on older
+        cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        cost = dict(cost)
         mem = memory_summary(compiled)
         hlo = compiled.as_text()
         colls = collective_stats(hlo)

@@ -131,19 +131,35 @@ def simulate(inst: PIESInstance, assignment: np.ndarray, comp_cost,
              *, policy: str = "edf", arrival_rate: float = 20.0,
              prompt_tokens: int = 128, new_tokens: int = 32,
              max_batch: int = 8, seed: int = 0,
-             delta_max: Optional[float] = None) -> Dict[str, float]:
+             delta_max: Optional[float] = None,
+             arrivals=None, tick_duration: float = 1.0) -> Dict[str, float]:
     """Simulate serving the routed requests; return realized-QoS stats.
 
     assignment: [U] implementation index per user (−1 = dropped).
     comp_cost: [P] per-implementation compute cost (catalog w_sm).
+    arrivals: optional :class:`repro.workloads.ArrivalProcess` — when given,
+      request timestamps follow the (seed, tick)-seekable process (bursty /
+      diurnal traffic) instead of the i.i.d. exponential default; the first
+      ``U`` arrivals of the stream are used, one per user in order.
     """
     rng = np.random.default_rng(seed)
     delta_max = delta_max or inst.delta_max
+    if arrivals is not None:
+        times: List[float] = []
+        tick = 0
+        while len(times) < inst.U:
+            times.extend(arrivals.times_in_tick(seed, tick, tick_duration))
+            tick += 1
+            if tick > 100_000:
+                raise RuntimeError("arrival process produced no requests")
+        arrival_times = np.asarray(times[:inst.U])
+    else:
+        arrival_times = np.cumsum(
+            rng.exponential(1.0 / arrival_rate, size=inst.U))
     profiles: Dict[Tuple[int, int], ExecutorProfile] = {}
     reqs: List[ArrivingRequest] = []
-    t = 0.0
     for u in range(inst.U):
-        t += rng.exponential(1.0 / arrival_rate)
+        t = float(arrival_times[u])
         p = int(assignment[u])
         if p < 0:
             continue

@@ -1,0 +1,48 @@
+"""repro.workloads — workload generators, scenarios, batched evaluation.
+
+The dynamic counterpart of :mod:`repro.core`: deterministic ``(seed,
+tick)``-seekable arrival processes and population dynamics compose into a
+registry of named end-to-end scenarios (``steady``, ``diurnal``,
+``flash_crowd``, ``mobility_churn``, ``edge_failure``), each yielding a
+sequence of :class:`~repro.core.instance.PIESInstance`\\ s; the batched
+engine pads instance stacks to fixed shapes and evaluates whole
+(scenario × seed × tick) Monte-Carlo sweeps in one jitted ``vmap``'d
+accelerator call.
+"""
+from .arrivals import (
+    ArrivalProcess,
+    PoissonArrivals,
+    MMPPArrivals,
+    DiurnalArrivals,
+    TraceArrivals,
+)
+from .population import (
+    hash_uniform,
+    ZipfPopularity,
+    ChurnModel,
+    MarkovMobility,
+)
+from .scenarios import (
+    Scenario,
+    register_scenario,
+    get_scenario,
+    list_scenarios,
+    horizon,
+)
+from .batched import (
+    PaddedBatch,
+    pad_instances,
+    evaluate_batch,
+    evaluate_host,
+    sweep,
+)
+
+__all__ = [
+    "ArrivalProcess", "PoissonArrivals", "MMPPArrivals", "DiurnalArrivals",
+    "TraceArrivals",
+    "hash_uniform", "ZipfPopularity", "ChurnModel", "MarkovMobility",
+    "Scenario", "register_scenario", "get_scenario", "list_scenarios",
+    "horizon",
+    "PaddedBatch", "pad_instances", "evaluate_batch", "evaluate_host",
+    "sweep",
+]

@@ -1,0 +1,225 @@
+"""Batched accelerator-side scenario evaluation.
+
+Monte-Carlo sweeps over (scenario × seed × tick) evaluate hundreds of
+independent :class:`PIESInstance`\\ s. Doing that with a Python loop pays a
+dispatch + trace per instance; instead, :func:`pad_instances` pads every
+instance to the batch's fixed (U, P, E) envelope and stacks them into a
+single batched :class:`~repro.core.instance.JaxInstance` pytree, and
+:func:`evaluate_batch` runs QoS-matrix construction, greedy placement
+(:func:`egp_place_jax` / :func:`agp_place_jax`) and the σ objective for the
+*whole stack* inside one ``jax.jit``'d ``vmap`` — one accelerator call per
+sweep.
+
+Padding conventions (chosen so padded rows are provably inert):
+
+* **users** — padded slots request the dummy service id ``S`` that no model
+  implements (eligibility row ≡ False ⇒ zero QoS, zero greedy gain, zero σ)
+  and are covered by a padded edge, so they never enter a real edge's user
+  mask or satisfaction test;
+* **models** — padded rows carry the distinct dummy service ``S + 1`` (no
+  user requests it) and an effectively-infinite storage cost, so they are
+  never feasible;
+* **edges** — padded edges have zero storage, so the greedy loops exit
+  immediately; at least one padded edge always exists to host padded users.
+
+``evaluate_host`` is the NumPy reference path (per-instance
+``egp_np``/``agp_np`` + ``sigma_np``) the batched results are validated
+against — see ``tests/test_workloads.py`` and ``benchmarks/scenarios.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.instance import JaxInstance, PIESInstance
+from repro.core.placement import agp_np, egp_np
+from repro.core.qos import qos_matrix_np
+from repro.core.scheduling import sigma_np
+
+__all__ = [
+    "PaddedBatch",
+    "pad_instances",
+    "evaluate_batch",
+    "evaluate_host",
+    "sweep",
+]
+
+#: Storage cost assigned to padded model rows — larger than any edge budget.
+_PAD_STORAGE = 1e9
+
+
+@dataclasses.dataclass
+class PaddedBatch:
+    """A stack of instances padded to a common (U, P, E) envelope."""
+
+    jax_instance: JaxInstance      # every leaf is batched: [B, ...]
+    n_services: int                # static scatter width (incl. dummy ids)
+    dims: List[Tuple[int, int, int]]   # true (U, P, E) per instance
+
+    @property
+    def B(self) -> int:
+        return len(self.dims)
+
+
+def _share_factors(inst: PIESInstance) -> Tuple[np.ndarray, np.ndarray]:
+    counts = inst.covered_counts()
+    return (counts[inst.u_edge] / inst.K[inst.u_edge],
+            counts[inst.u_edge] / inst.W[inst.u_edge])
+
+
+def pad_instances(instances: Sequence[PIESInstance],
+                  u_pad: Optional[int] = None,
+                  p_pad: Optional[int] = None,
+                  e_pad: Optional[int] = None) -> PaddedBatch:
+    """Stack ``instances`` into one batched, fixed-shape JaxInstance."""
+    import jax.numpy as jnp
+
+    assert instances, "cannot pad an empty batch"
+    U_pad = u_pad or max(i.U for i in instances)
+    P_pad = p_pad or max(i.P for i in instances)
+    # +1 guarantees a padded edge exists in every instance (hosts pad users)
+    E_pad = e_pad or (max(i.E for i in instances) + 1)
+    S_max = max(int(i.sm_service.max()) + 1 if i.P else 0 for i in instances)
+    user_dummy, model_dummy = S_max, S_max + 1
+
+    rows: Dict[str, List[np.ndarray]] = {f.name: [] for f in
+                                         dataclasses.fields(JaxInstance)}
+    dims = []
+    for inst in instances:
+        U, P, E = inst.U, inst.P, inst.E
+        assert U <= U_pad and P <= P_pad and E < E_pad, \
+            f"instance ({U},{P},{E}) exceeds pad envelope " \
+            f"({U_pad},{P_pad},{E_pad})"
+        dims.append((U, P, E))
+        du, dp, de = U_pad - U, P_pad - P, E_pad - E
+        share_k, share_w = _share_factors(inst)
+
+        def upad(a, fill):
+            return np.concatenate([np.asarray(a, np.float64),
+                                   np.full(du, fill)])
+
+        def ppad(a, fill):
+            return np.concatenate([np.asarray(a, np.float64),
+                                   np.full(dp, fill)])
+
+        rows["u_alpha"].append(upad(inst.u_alpha, 0.0))
+        rows["u_delta"].append(upad(inst.u_delta, 0.0))
+        rows["u_share_k"].append(upad(share_k, 0.0))
+        rows["u_share_w"].append(upad(share_w, 0.0))
+        rows["u_service"].append(np.concatenate(
+            [inst.u_service, np.full(du, user_dummy, dtype=np.int64)]))
+        rows["u_edge"].append(np.concatenate(
+            [inst.u_edge, np.full(du, E_pad - 1, dtype=np.int64)]))
+        rows["sm_service"].append(np.concatenate(
+            [inst.sm_service, np.full(dp, model_dummy, dtype=np.int64)]))
+        rows["sm_acc"].append(ppad(inst.sm_acc, 0.0))
+        rows["sm_k"].append(ppad(inst.sm_k, 0.0))
+        rows["sm_w"].append(ppad(inst.sm_w, 0.0))
+        rows["sm_r"].append(ppad(inst.sm_r, _PAD_STORAGE))
+        rows["R"].append(np.concatenate([inst.R, np.zeros(de)]))
+        rows["delta_max"].append(np.float64(inst.delta_max))
+
+    int_fields = {"u_service", "u_edge", "sm_service"}
+    leaves = {
+        name: jnp.asarray(np.stack(vals),
+                          jnp.int32 if name in int_fields else jnp.float32)
+        for name, vals in rows.items()
+    }
+    return PaddedBatch(jax_instance=JaxInstance(**leaves),
+                       n_services=model_dummy + 1, dims=dims)
+
+
+def _build_evaluator(algo: str, n_services: int, max_iters: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.placement import agp_place_jax, egp_place_jax
+    from repro.core.qos import eligibility_jnp, qos_matrix_jnp
+    from repro.core.scheduling import sigma_jnp
+
+    def one(inst: JaxInstance):
+        Q = qos_matrix_jnp(inst)
+        elig = eligibility_jnp(inst)
+        if algo == "egp":
+            x = egp_place_jax(Q, elig, inst.u_edge, inst.u_service,
+                              inst.sm_service, inst.sm_r, inst.R,
+                              n_services, max_iters=max_iters)
+        elif algo == "agp":
+            x = agp_place_jax(Q, elig, inst.u_edge, inst.sm_r, inst.R,
+                              max_iters=max_iters)
+        else:
+            raise ValueError(f"unknown batched algorithm {algo!r}")
+        value = sigma_jnp(Q, elig, inst.u_edge, x)
+        return value, x
+
+    return jax.jit(jax.vmap(one))
+
+
+@functools.lru_cache(maxsize=16)
+def _cached_evaluator(algo: str, n_services: int, max_iters: int):
+    return _build_evaluator(algo, n_services, max_iters)
+
+
+def evaluate_batch(batch: PaddedBatch, algo: str = "egp",
+                   max_iters: int = 512):
+    """One jitted accelerator call: ``(values [B], x [B, E_pad, P_pad])``.
+
+    ``values[b]`` is σ(EGP/AGP placement) of instance ``b``; padding
+    contributes exactly zero (see module docstring), so values match the
+    per-instance host path up to float32 accumulation.
+    """
+    fn = _cached_evaluator(algo, batch.n_services, max_iters)
+    values, x = fn(batch.jax_instance)
+    return values, x
+
+
+def evaluate_host(instances: Sequence[PIESInstance],
+                  algo: str = "egp") -> np.ndarray:
+    """NumPy reference: per-instance greedy placement + σ, no batching."""
+    place = {"egp": egp_np, "agp": agp_np}[algo]
+    out = []
+    for inst in instances:
+        Q = qos_matrix_np(inst)
+        out.append(sigma_np(inst, place(inst, Q), Q))
+    return np.asarray(out)
+
+
+def sweep(scenario_names: Sequence[str], seeds: Sequence[int],
+          n_ticks: Optional[int] = None, algo: str = "egp",
+          **overrides) -> Dict:
+    """Monte-Carlo sweep: every (scenario, seed, tick) instance evaluated
+    in a single jitted call.
+
+    Returns ``{"values": {name: [n_seeds, n_ticks] np.ndarray},
+    "instances": [...], "labels": [(name, seed, tick)], "batch": batch}``.
+    """
+    from .scenarios import get_scenario
+
+    instances: List[PIESInstance] = []
+    labels: List[Tuple[str, int, int]] = []
+    ticks_of: Dict[str, int] = {}
+    for name in scenario_names:
+        scenario = get_scenario(name, **overrides)
+        T = int(n_ticks or scenario.n_ticks)
+        ticks_of[name] = T
+        for seed in seeds:
+            for tick, inst in enumerate(scenario.horizon(seed, T)):
+                instances.append(inst)
+                labels.append((name, int(seed), tick))
+
+    batch = pad_instances(instances)
+    values, _ = evaluate_batch(batch, algo=algo)
+    values = np.asarray(values, np.float64)
+
+    shaped: Dict[str, np.ndarray] = {}
+    off = 0
+    for name in scenario_names:
+        T = ticks_of[name]
+        n = len(seeds) * T
+        shaped[name] = values[off:off + n].reshape(len(seeds), T)
+        off += n
+    return {"values": shaped, "instances": instances, "labels": labels,
+            "batch": batch}

@@ -1,0 +1,304 @@
+"""Scenario registry: named end-to-end workloads over the PIES model.
+
+A :class:`Scenario` composes an arrival process, popularity/churn/mobility
+dynamics, and an optional edge-failure schedule into a pure generator of
+:class:`~repro.core.instance.PIESInstance` sequences:
+
+* infrastructure (edge capacities) and the service-model catalog are drawn
+  **once per seed** and held fixed over the horizon, so per-tick placements
+  are comparable and switching costs are meaningful;
+* the *population* breathes per tick: the active user count follows the
+  arrival process, user attributes follow churn generations, coverage
+  follows the mobility walk;
+* ``edge_failure`` composes with :mod:`repro.distributed.elastic` — dead
+  hosts map to dead edge clouds via :func:`recovery_plan`, whose storage is
+  zeroed (nothing placeable) and whose users are re-homed to the nearest
+  surviving edge on the ring, exactly the paper's service-level recovery.
+
+Registered scenarios (``list_scenarios()``): ``steady``, ``diurnal``,
+``flash_crowd``, ``mobility_churn``, ``edge_failure``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.instance import (PIESInstance, draw_edge_capacities,
+                                 draw_service_catalog)
+from repro.distributed.elastic import ClusterState, recovery_plan
+
+from .arrivals import (ArrivalProcess, DiurnalArrivals, MMPPArrivals,
+                       PoissonArrivals)
+from .population import ChurnModel, MarkovMobility, ZipfPopularity
+
+__all__ = [
+    "Scenario",
+    "register_scenario",
+    "get_scenario",
+    "list_scenarios",
+    "horizon",
+]
+
+_TAG_INFRA = 0x0C1
+_TAG_CATALOG = 0x0C2
+
+
+def _rng(seed: int, tag: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([int(seed), tag]))
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named, seedable workload over a fixed infrastructure."""
+
+    name: str
+    arrivals: ArrivalProcess
+    popularity_factory: Callable[[int], ZipfPopularity]
+    churn: ChurnModel = ChurnModel()
+    mobility_p_move: float = 0.0
+    n_edges: int = 6
+    n_services: int = 24
+    max_impls: int = 4
+    n_user_slots: int = 96
+    n_ticks: int = 8
+    delta_max: float = 10.0
+    #: (tick, host) pairs: host (= edge group) dies at the start of `tick`
+    #: and stays dead for the rest of the horizon.
+    failure_schedule: Tuple[Tuple[int, int], ...] = ()
+    devices_per_host: int = 8
+    model_parallel: int = 4
+    description: str = ""
+
+    # -- static-per-seed draws (memoized: identical across the horizon) ---
+    def infrastructure(self, seed: int):
+        """Edge capacities ``(K, W, R)`` — §VI-B ranges, fixed per seed."""
+        return tuple(a.copy() for a in _infrastructure_cached(self, int(seed)))
+
+    def catalog(self, seed: int):
+        """Service-model catalog — §VI-B ranges, fixed per seed."""
+        return tuple(a.copy() for a in _catalog_cached(self, int(seed)))
+
+    # -- failure handling -------------------------------------------------
+    def dead_edges_at(self, tick: int) -> List[int]:
+        """Edges dead at ``tick`` per the elastic recovery plan."""
+        failed = frozenset(h for t, h in self.failure_schedule if t <= tick)
+        if not failed:
+            return []
+        return list(_dead_edges_cached(self, failed))
+
+    @staticmethod
+    def _rehome(u_edge: np.ndarray, dead: List[int],
+                n_edges: int) -> np.ndarray:
+        """Move users on dead edges to the nearest surviving ring edge."""
+        if not dead:
+            return u_edge
+        alive = np.array([e for e in range(n_edges) if e not in dead])
+        if alive.size == 0:
+            raise RuntimeError("all edge clouds failed; nothing to re-home to")
+        # ring distance from every edge to every surviving edge
+        d = np.abs(np.arange(n_edges)[:, None] - alive[None, :])
+        d = np.minimum(d, n_edges - d)
+        nearest = alive[np.argmin(d, axis=1)]  # [E] — identity on survivors
+        return nearest[u_edge]
+
+    # -- the generator ----------------------------------------------------
+    def active_users_at(self, seed: int, tick: int) -> int:
+        """Active population size: arrivals clipped to the slot pool."""
+        return int(np.clip(self.arrivals.count_at(seed, tick), 1,
+                           self.n_user_slots))
+
+    def instance_at(self, seed: int, tick: int,
+                    mobility_cache: Optional[np.ndarray] = None
+                    ) -> PIESInstance:
+        """Materialize the PIES instance at ``(seed, tick)`` — pure.
+
+        ``mobility_cache`` optionally passes a precomputed
+        ``MarkovMobility.trajectory`` ([≥tick+1, n_user_slots]) so horizon
+        generation is O(T·U) instead of O(T²·U).
+        """
+        K, W, R = self.infrastructure(seed)
+        sm_service, sm_acc, sm_k, sm_w, sm_r = self.catalog(seed)
+        pop = self.popularity_factory(self.n_services)
+
+        n_active = self.active_users_at(seed, tick)
+        service, alpha, delta = self.churn.attributes_at(
+            seed, tick, n_active, pop)
+
+        mob = MarkovMobility(self.n_edges, self.mobility_p_move)
+        if mobility_cache is not None:
+            u_edge = mobility_cache[tick, :n_active].copy()
+        elif self.mobility_p_move > 0.0:
+            u_edge = mob.edges_at(seed, tick, n_active)
+        else:
+            u_edge = mob.home_edges(seed, n_active)
+
+        dead = self.dead_edges_at(tick)
+        u_edge = self._rehome(u_edge, dead, self.n_edges)
+        R = R.copy()
+        if dead:
+            R[np.asarray(dead)] = 0.0  # dead edge groups place nothing
+
+        inst = PIESInstance(
+            K=K, W=W, R=R,
+            sm_service=sm_service, sm_acc=sm_acc,
+            sm_k=sm_k, sm_w=sm_w, sm_r=sm_r,
+            u_edge=u_edge, u_service=service,
+            u_alpha=alpha, u_delta=delta,
+            delta_max=self.delta_max,
+        )
+        inst.validate()
+        return inst
+
+    def horizon(self, seed: int,
+                n_ticks: Optional[int] = None) -> List[PIESInstance]:
+        """The full per-tick instance sequence for one seed."""
+        T = int(n_ticks or self.n_ticks)
+        cache = None
+        if self.mobility_p_move > 0.0:
+            mob = MarkovMobility(self.n_edges, self.mobility_p_move)
+            cache = mob.trajectory(seed, T, self.n_user_slots)
+        return [self.instance_at(seed, t, mobility_cache=cache)
+                for t in range(T)]
+
+
+# Memoized per-(scenario, seed) draws — Scenario is a frozen (hashable)
+# dataclass, so a horizon of T ticks draws infrastructure/catalog once and
+# re-derives the elastic recovery plan only per distinct failed-host set.
+
+@functools.lru_cache(maxsize=512)
+def _infrastructure_cached(scenario: Scenario, seed: int):
+    return draw_edge_capacities(_rng(seed, _TAG_INFRA), scenario.n_edges)
+
+
+@functools.lru_cache(maxsize=512)
+def _catalog_cached(scenario: Scenario, seed: int):
+    return draw_service_catalog(_rng(seed, _TAG_CATALOG),
+                                scenario.n_services, scenario.max_impls)
+
+
+@functools.lru_cache(maxsize=512)
+def _dead_edges_cached(scenario: Scenario, failed: frozenset):
+    from repro.distributed.elastic import plan_survivor_mesh
+    healthy = ClusterState(n_hosts=scenario.n_edges,
+                           devices_per_host=scenario.devices_per_host)
+    data0, _ = plan_survivor_mesh(healthy, scenario.model_parallel)
+    state = dataclasses.replace(healthy, failed_hosts=failed)
+    plan = recovery_plan(
+        state, model_parallel=scenario.model_parallel,
+        global_batch=data0 * scenario.model_parallel, old_data=data0,
+        edge_of_host={h: h for h in range(scenario.n_edges)})
+    return tuple(plan["dead_edges"])
+
+
+# ===========================================================================
+# Registry
+# ===========================================================================
+
+_REGISTRY: Dict[str, Callable[[], Scenario]] = {}
+
+
+def register_scenario(factory: Callable[[], Scenario]):
+    """Decorator: register a zero-arg scenario factory under its name."""
+    scenario = factory()
+    _REGISTRY[scenario.name] = factory
+    return factory
+
+
+def list_scenarios() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_scenario(name: str, **overrides) -> Scenario:
+    try:
+        scenario = _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {list_scenarios()}") from None
+    return dataclasses.replace(scenario, **overrides) if overrides \
+        else scenario
+
+
+def horizon(name: str, seed: int = 0,
+            n_ticks: Optional[int] = None, **overrides) -> List[PIESInstance]:
+    """Convenience: ``get_scenario(name).horizon(seed, n_ticks)``."""
+    return get_scenario(name, **overrides).horizon(seed, n_ticks)
+
+
+# ===========================================================================
+# The catalog
+# ===========================================================================
+
+@register_scenario
+def steady() -> Scenario:
+    """Stationary i.i.d. traffic — the paper's §VI-B setting over time."""
+    return Scenario(
+        name="steady",
+        arrivals=PoissonArrivals(rate=64.0),
+        popularity_factory=lambda s: ZipfPopularity(s, exponent=0.8),
+        churn=ChurnModel(lifetime=64),
+        description="Homogeneous Poisson arrivals, static Zipf popularity, "
+                    "negligible churn — the stationary baseline.",
+    )
+
+
+@register_scenario
+def diurnal() -> Scenario:
+    """Day/night sinusoidal load with slow popularity drift."""
+    return Scenario(
+        name="diurnal",
+        arrivals=DiurnalArrivals(base_rate=56.0, amplitude=0.7, period=8),
+        popularity_factory=lambda s: ZipfPopularity(
+            s, exponent=1.0, drift_period=4),
+        churn=ChurnModel(lifetime=24),
+        description="Sinusoidal arrival rate (period 8 ticks) with the "
+                    "popularity hot spot rotating every 4 ticks.",
+    )
+
+
+@register_scenario
+def flash_crowd() -> Scenario:
+    """Bursty MMPP traffic with a fast-moving hot service."""
+    return Scenario(
+        name="flash_crowd",
+        arrivals=MMPPArrivals(base_rate=36.0, burst_rate=92.0,
+                              p_burst=0.4, block=2),
+        popularity_factory=lambda s: ZipfPopularity(
+            s, exponent=1.4, drift_period=2, drift_step=5),
+        churn=ChurnModel(lifetime=8),
+        description="Block-renewal MMPP bursts (2.5× base rate) while the "
+                    "Zipf head jumps 5 services every 2 ticks — the "
+                    "placement-churn stress test.",
+    )
+
+
+@register_scenario
+def mobility_churn() -> Scenario:
+    """Users migrate across edge clouds while the population turns over."""
+    return Scenario(
+        name="mobility_churn",
+        arrivals=PoissonArrivals(rate=64.0),
+        popularity_factory=lambda s: ZipfPopularity(s, exponent=1.0),
+        churn=ChurnModel(lifetime=6),
+        mobility_p_move=0.3,
+        description="Ring random-walk mobility (p_move=0.3) plus fast churn "
+                    "(mean lifetime 6 ticks): coverage sets mutate while "
+                    "demand stays stationary in aggregate.",
+    )
+
+
+@register_scenario
+def edge_failure() -> Scenario:
+    """Edge groups die mid-horizon; survivors absorb their users."""
+    return Scenario(
+        name="edge_failure",
+        arrivals=PoissonArrivals(rate=64.0),
+        popularity_factory=lambda s: ZipfPopularity(s, exponent=1.0),
+        churn=ChurnModel(lifetime=32),
+        failure_schedule=((3, 1), (5, 4)),
+        description="Hosts 1 and 4 fail at ticks 3 and 5 (via "
+                    "repro.distributed.elastic recovery_plan); their users "
+                    "re-home to the nearest surviving ring edge.",
+    )

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.qos_matrix.qos_matrix import qos_matrix_pallas
 from repro.kernels.qos_matrix.ref import qos_matrix_ref

@@ -1,7 +1,7 @@
 """Placement algorithm tests: feasibility, exactness, approximation, JAX parity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     agp_literal_np,

@@ -1,7 +1,7 @@
 """Unit + property tests for the QoS model (Eqs. 1–6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     PIESInstance,

@@ -2,7 +2,7 @@
 import itertools
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     eligibility_np,

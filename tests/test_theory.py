@@ -1,6 +1,6 @@
 """Property tests for the paper's theory (Theorems 1 and 3)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     PIESInstance,
