@@ -10,48 +10,62 @@ optima as the paper's CBC solves, minus the 20-hour runtimes. ``agp`` here
 is the closed-form-marginal implementation (identical picks); the literal
 σ-recomputation variant is timed separately as ``agp_literal`` to show the
 runtime separation the paper reports.
+
+Since PR 2 the per-(U, trial, algorithm) grid runs through the
+:mod:`repro.sweeps` engine — the classic host-path algorithms via its host
+executor (exact float64 semantics, per-instance timings preserved) and,
+when ``validate_engine`` is set, EGP additionally through the batched
+accelerator path, checked against the host values at 1e-4.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
-import time
 from pathlib import Path
 
 import numpy as np
 
-from repro.core import (agp_literal_np, agp_np, egp_np, opt_np, oms_np,
-                        qos_matrix_np, rnd_np, sck_np, schedule_value_np,
-                        sigma_np, synthetic_instance)
+from repro.sweeps import HOST_PARITY_ATOL, SweepSpec, run_sweep
 
 OUT = Path(__file__).resolve().parent.parent / "experiments" / "paper"
 
+#: tolerance between the engine's float32 batched EGP and host float64
+ENGINE_ATOL = HOST_PARITY_ATOL
+
 
 def run(trials: int = 10, users=(50, 100, 150, 200, 250), seed0: int = 0,
-        literal_agp: bool = True, verbose: bool = True):
-    algos = {
-        "opt": lambda inst, Q: opt_np(inst, Q),
-        "agp": lambda inst, Q: agp_np(inst, Q),
-        "egp": lambda inst, Q: egp_np(inst, Q),
-        "sck": lambda inst, Q: sck_np(inst, Q),
-    }
+        literal_agp: bool = True, validate_engine: bool = True,
+        verbose: bool = True):
+    algo_names = ["opt", "agp", "egp", "sck", "rnd"]
     if literal_agp:
-        algos["agp_literal"] = lambda inst, Q: agp_literal_np(inst, Q)
+        algo_names.append("agp_literal")
 
-    rows = []
+    rows, engine_diffs = [], []
     for U in users:
+        # the classic instance stream: synthetic_instance(U, seed0+1000t+U)
+        seeds = tuple(seed0 + 1000 * t + U for t in range(trials))
+        spec = SweepSpec(scenarios=("synthetic",), seeds=seeds, n_ticks=1,
+                         algos=tuple(algo_names),
+                         override_grid=({"n_users": U},),
+                         force_host=("egp", "agp"))
+        res = run_sweep(spec)
+        (variant,) = {v for v, _ in res.values}
+
+        if validate_engine:
+            accel = run_sweep(dataclasses.replace(
+                spec, algos=("egp",), force_host=()))
+            diff = np.abs(accel.values[(variant, "egp")]
+                          - res.values[(variant, "egp")])
+            engine_diffs.append(float(diff.max()))
+            assert engine_diffs[-1] <= ENGINE_ATOL, \
+                f"engine EGP diverges from host at U={U}: " \
+                f"{engine_diffs[-1]:.2e} > {ENGINE_ATOL}"
+
         for t in range(trials):
-            inst = synthetic_instance(U, seed=seed0 + 1000 * t + U)
-            Q = qos_matrix_np(inst)
-            vals, times = {}, {}
-            for name, fn in algos.items():
-                t0 = time.perf_counter()
-                x = fn(inst, Q)
-                times[name] = time.perf_counter() - t0
-                vals[name] = sigma_np(inst, x, Q)
-            t0 = time.perf_counter()
-            _, y = rnd_np(inst, seed=seed0 + t)
-            times["rnd"] = time.perf_counter() - t0
-            vals["rnd"] = schedule_value_np(inst, y, Q)
+            vals = {a: float(res.values[(variant, a)][t, 0])
+                    for a in algo_names}
+            times = {a: float(res.times[(variant, a)][t, 0])
+                     for a in algo_names}
             rows.append({"U": U, "trial": t, "values": vals, "times": times})
             if verbose:
                 r = {k: round(v / max(vals["opt"], 1e-9), 3)
@@ -59,13 +73,15 @@ def run(trials: int = 10, users=(50, 100, 150, 200, 250), seed0: int = 0,
                 print(f"U={U} trial={t}: ratios {r}")
 
     summary = {}
-    for name in list(algos) + ["rnd"]:
+    for name in algo_names:
         ratios = [r["values"][name] / max(r["values"]["opt"], 1e-9)
                   for r in rows]
         ts = [r["times"][name] for r in rows]
         summary[name] = {"mean_ratio": float(np.mean(ratios)),
                          "min_ratio": float(np.min(ratios)),
                          "mean_time_s": float(np.mean(ts))}
+    if engine_diffs:
+        summary["engine_egp_max_abs_diff"] = float(max(engine_diffs))
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig3_validation.json").write_text(
         json.dumps({"rows": rows, "summary": summary}, indent=1))

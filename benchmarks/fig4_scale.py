@@ -4,41 +4,63 @@ Paper setup: U ∈ {100, 200, …, 1000}; EGP vs SCK vs RND (OPT omitted at
 scale, as in the paper — its CBC runs took up to 20 h; our exact DP is
 still run optionally for ground truth since it stays fast). Headline:
 EGP ≈ 1.5× SCK objective while remaining the fastest.
+
+Since PR 2 the grid runs through the :mod:`repro.sweeps` engine: EGP/AGP
+on the batched accelerator path (auto-chunked to the memory budget,
+``shard_map``-sharded when more than one device exists — the scaling
+story), SCK/RND/OPT via the host executor. The smallest-U group is
+additionally recomputed on the host path and compared at 1e-4, so the
+classic validation survives the rewiring.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
-import time
 from pathlib import Path
 
 import numpy as np
 
-from repro.core import (egp_np, agp_np, opt_np, qos_matrix_np, rnd_np,
-                        sck_np, schedule_value_np, sigma_np,
-                        synthetic_instance)
+from repro.sweeps import HOST_PARITY_ATOL, SweepSpec, run_sweep
 
 OUT = Path(__file__).resolve().parent.parent / "experiments" / "paper"
 
+#: tolerance between the engine's float32 batched EGP and host float64
+ENGINE_ATOL = HOST_PARITY_ATOL
+
 
 def run(trials: int = 10, users=tuple(range(100, 1001, 100)), seed0: int = 0,
-        with_opt: bool = True, verbose: bool = True):
+        with_opt: bool = True, host_check: bool = True,
+        verbose: bool = True):
+    accel_algos = ["egp", "agp"]
+    host_algos = ["sck", "rnd"] + (["opt"] if with_opt else [])
+    algo_names = accel_algos + host_algos
+
     rows = []
+    host_check_diff = None
     for U in users:
+        # the classic instance stream: synthetic_instance(U, seed0+7919t+U)
+        seeds = tuple(seed0 + 7919 * t + U for t in range(trials))
+        spec = SweepSpec(scenarios=("synthetic",), seeds=seeds, n_ticks=1,
+                         algos=tuple(algo_names),
+                         override_grid=({"n_users": U},))
+        res = run_sweep(spec)
+        (variant,) = {v for v, _ in res.values}
+
+        if host_check and U == min(users):
+            host = run_sweep(dataclasses.replace(
+                spec, algos=("egp",), force_host=("egp",)))
+            host_check_diff = float(np.abs(
+                res.values[(variant, "egp")]
+                - host.values[(variant, "egp")]).max())
+            assert host_check_diff <= ENGINE_ATOL, \
+                f"engine EGP diverges from host at U={U}: " \
+                f"{host_check_diff:.2e} > {ENGINE_ATOL}"
+
         for t in range(trials):
-            inst = synthetic_instance(U, seed=seed0 + 7919 * t + U)
-            Q = qos_matrix_np(inst)
-            vals, times = {}, {}
-            for name, fn in [("egp", egp_np), ("agp", agp_np),
-                             ("sck", sck_np)] + ([("opt", opt_np)]
-                                                 if with_opt else []):
-                t0 = time.perf_counter()
-                x = fn(inst, Q)
-                times[name] = time.perf_counter() - t0
-                vals[name] = sigma_np(inst, x, Q)
-            t0 = time.perf_counter()
-            _, y = rnd_np(inst, seed=t)
-            times["rnd"] = time.perf_counter() - t0
-            vals["rnd"] = schedule_value_np(inst, y, Q)
+            vals = {a: float(res.values[(variant, a)][t, 0])
+                    for a in algo_names}
+            times = {a: float(res.times[(variant, a)][t, 0])
+                     for a in algo_names}
             rows.append({"U": U, "trial": t, "values": vals, "times": times})
         if verbose:
             sub = [r for r in rows if r["U"] == U]
@@ -61,6 +83,8 @@ def run(trials: int = 10, users=tuple(range(100, 1001, 100)), seed0: int = 0,
     egp_vs_sck = float(np.mean([r["values"]["egp"] / max(r["values"]["sck"], 1e-9)
                                 for r in rows]))
     summary["egp_over_sck"] = egp_vs_sck
+    if host_check_diff is not None:
+        summary["engine_egp_max_abs_diff"] = host_check_diff
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig4_scale.json").write_text(
         json.dumps({"rows": rows, "summary": summary}, indent=1))

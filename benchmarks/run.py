@@ -1,25 +1,66 @@
 """Benchmark aggregator — one entry per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows. --full uses the paper's trial
-counts (slow); the default is a reduced-but-faithful pass.
+counts (slow); the default is a reduced-but-faithful pass. --json writes
+the same rows as structured JSON (the ``derived`` k=v pairs parsed into
+typed fields), so the BENCH_* perf trajectory can be captured mechanically.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
+
+
+def _parse_derived(derived: str) -> dict:
+    """``"a=1.5;b=2/3;paper=~1.5x"`` → typed fields (float where possible)."""
+    out = {}
+    for part in derived.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            out[part] = True
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+class _Emitter:
+    """Prints the classic CSV rows and accumulates structured records."""
+
+    def __init__(self):
+        self.rows = []
+
+    def __call__(self, name: str, us_per_call: float, derived: str) -> None:
+        # one decimal, bare integers unchanged: keeps sub-10us kernel rows
+        # meaningful without reformatting the big figure rows
+        us = f"{us_per_call:.1f}".rstrip("0").rstrip(".")
+        print(f"{name},{us},{derived}")
+        self.rows.append({"name": name, "us_per_call": float(us_per_call),
+                          "derived": derived,
+                          "fields": _parse_derived(derived)})
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as structured JSON")
     args = ap.parse_args()
     trials3 = 10 if args.full else 4
     trials4 = 100 if args.full else 3
     trials5 = 100 if args.full else 50
 
+    emit = _Emitter()
     print("name,us_per_call,derived")
 
     from benchmarks import fig3_validation, fig4_scale, fig5_realworld
@@ -29,40 +70,44 @@ def main() -> None:
     s3 = fig3_validation.run(trials=trials3, verbose=False,
                              literal_agp=args.full)
     dt = (time.perf_counter() - t0) * 1e6 / trials3
-    print(f"fig3_validation,{dt:.0f},egp_ratio={s3['egp']['mean_ratio']:.3f}"
-          f";agp_ratio={s3['agp']['mean_ratio']:.3f}"
-          f";sck_ratio={s3['sck']['mean_ratio']:.3f}"
-          f";paper=0.904/0.900/0.607")
+    emit("fig3_validation", dt,
+         f"egp_ratio={s3['egp']['mean_ratio']:.3f}"
+         f";agp_ratio={s3['agp']['mean_ratio']:.3f}"
+         f";sck_ratio={s3['sck']['mean_ratio']:.3f}"
+         f";paper=0.904/0.900/0.607")
 
     t0 = time.perf_counter()
     s4 = fig4_scale.run(trials=trials4, verbose=False)
     dt = (time.perf_counter() - t0) * 1e6 / trials4
-    print(f"fig4_scale,{dt:.0f},egp_over_sck={s4['egp_over_sck']:.2f}"
-          f";paper=~1.5x;egp_ratio={s4['egp'].get('mean_ratio', -1):.3f}")
+    emit("fig4_scale", dt,
+         f"egp_over_sck={s4['egp_over_sck']:.2f}"
+         f";paper=~1.5x;egp_ratio={s4['egp'].get('mean_ratio', -1):.3f}")
 
     t0 = time.perf_counter()
     s5 = fig5_realworld.run(trials=trials5, verbose=False)
     dt = (time.perf_counter() - t0) * 1e6 / trials5
     mobile = s5["placements"]["egp"].get("MobileNet", 0)
     total = sum(s5["placements"]["egp"].values())
-    print(f"fig5_realworld,{dt:.0f},egp_mobilenet={mobile}/{total}"
-          f";paper=exclusively_mobilenet"
-          f";qos_egp={s5['mean_qos']['egp']:.3f}")
+    emit("fig5_realworld", dt,
+         f"egp_mobilenet={mobile}/{total}"
+         f";paper=exclusively_mobilenet"
+         f";qos_egp={s5['mean_qos']['egp']:.3f}")
 
     sc = scenarios.run(seeds=(0, 1) if not args.full else (0, 1, 2, 3),
                        n_ticks=4 if not args.full else 8, verbose=False)
-    # us_per_call is the batched accelerator call itself (incl. compile),
-    # not the host-side validation loop scenarios.run also performs.
+    # us_per_call is the engine's chunked accelerator evaluation (incl.
+    # compile), not the host-side validation loop scenarios.run also does.
     dt = sc["batched_s"] * 1e6 / sc["n_instances"]
     dyn = sc["dynamic"]["flash_crowd"]
-    print(f"scenario_sweep,{dt:.0f},n={sc['n_instances']}"
-          f";scenarios={sc['n_scenarios']}"
-          f";max_abs_diff={sc['max_abs_diff']:.1e}"
-          f";host_us={sc['host_s'] * 1e6 / sc['n_instances']:.0f}"
-          f";hyst_minus_greedy={dyn['hysteresis'] - dyn['greedy']:.1f}")
+    emit("scenario_sweep", dt,
+         f"n={sc['n_instances']}"
+         f";scenarios={sc['n_scenarios']}"
+         f";max_abs_diff={sc['max_abs_diff']:.1e}"
+         f";host_us={sc['host_s'] * 1e6 / sc['n_instances']:.0f}"
+         f";hyst_minus_greedy={dyn['hysteresis'] - dyn['greedy']:.1f}")
 
     for name, us, derived in kernels_micro.run(verbose=False):
-        print(f"kernel_{name},{us:.1f},{derived}")
+        emit(f"kernel_{name}", us, derived)
 
     rows = roofline.build(verbose=False)
     ok_rows = [r for r in rows if "skip" not in r]
@@ -71,11 +116,19 @@ def main() -> None:
         best = max(ok_rows, key=lambda r: r["roofline_fraction"])
         import numpy as np
         med = float(np.median([r["roofline_fraction"] for r in ok_rows]))
-        print(f"roofline_table,0,cells={len(ok_rows)};median_fraction={med:.3f}"
-              f";worst={worst['arch']}/{worst['shape']}={worst['roofline_fraction']:.3f}"
-              f";best={best['arch']}/{best['shape']}={best['roofline_fraction']:.3f}")
+        emit("roofline_table", 0,
+             f"cells={len(ok_rows)};median_fraction={med:.3f}"
+             f";worst={worst['arch']}/{worst['shape']}={worst['roofline_fraction']:.3f}"
+             f";best={best['arch']}/{best['shape']}={best['roofline_fraction']:.3f}")
     else:
-        print("roofline_table,0,no dry-run artifacts (run repro.launch.dryrun)")
+        emit("roofline_table", 0,
+             "no_dryrun_artifacts=1;hint=run repro.launch.dryrun")
+
+    if args.json:
+        path = Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"full": bool(args.full), "rows": emit.rows}, indent=1))
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
-"""Scenario sweep benchmark — the repro.workloads subsystem end-to-end.
+"""Scenario sweep benchmark — the repro.sweeps engine end-to-end.
 
 Runs every registered scenario (steady, diurnal, flash_crowd,
-mobility_churn, edge_failure) over a (seed × tick) grid, evaluates the full
-instance stack in **one** jitted vmapped accelerator call, and validates the
-batched objectives against the per-instance host path (``egp_np`` +
-``sigma_np``, atol 1e-4). Also reports the dynamic-policy comparison
-(static / greedy / hysteresis) on the churn-heavy scenarios.
+mobility_churn, edge_failure, trace_replay) over a (seed × tick) grid
+through :func:`repro.sweeps.run_sweep` — the same declarative
+chunked/sharded path that drives `python -m repro.sweeps` (plain jitted
+``vmap`` on one device, ``shard_map`` across the mesh batch axis on many)
+— and validates the engine's objectives against the per-instance host path
+(``egp_np`` + ``sigma_np``, atol 1e-4). Also reports the dynamic-policy
+comparison (static / greedy / hysteresis) on the churn-heavy scenarios.
 
     PYTHONPATH=src python -m benchmarks.scenarios
 """
@@ -17,20 +19,27 @@ from typing import Dict, Sequence
 import numpy as np
 
 from repro.core.dynamic import evaluate_horizon
-from repro.workloads import evaluate_host, list_scenarios, sweep
+from repro.sweeps import HOST_PARITY_ATOL, SweepSpec, materialize, run_sweep
+from repro.workloads import evaluate_host, list_scenarios
 
 #: acceptance tolerance between batched float32 and host float64 objectives
-ATOL = 1e-4
+ATOL = HOST_PARITY_ATOL
 
 
 def run(seeds: Sequence[int] = (0, 1), n_ticks: int = 4, algo: str = "egp",
         switching_cost: float = 3.0, verbose: bool = True) -> Dict:
     names = list_scenarios()
+    spec = SweepSpec(scenarios=tuple(names), seeds=tuple(seeds),
+                     n_ticks=n_ticks, algos=(algo,))
 
     t0 = time.perf_counter()
-    result = sweep(names, seeds=seeds, n_ticks=n_ticks, algo=algo)
+    result = run_sweep(spec)  # in-memory: chunked accelerator evaluation
     batched_s = time.perf_counter() - t0
-    instances = result["instances"]
+
+    instances = []
+    for name in names:
+        instances += materialize(name, (), [(s, t) for s in seeds
+                                            for t in range(n_ticks)])
     n = len(instances)
     assert n >= 16, f"sweep too small for a meaningful batch ({n} < 16)"
 
@@ -38,7 +47,7 @@ def run(seeds: Sequence[int] = (0, 1), n_ticks: int = 4, algo: str = "egp",
     host = evaluate_host(instances, algo=algo)
     host_s = time.perf_counter() - t0
 
-    flat = np.concatenate([result["values"][name].reshape(-1)
+    flat = np.concatenate([result.values[(name, algo)].reshape(-1)
                            for name in names])
     max_abs_diff = float(np.abs(flat - host).max())
     assert max_abs_diff <= ATOL, \
@@ -46,9 +55,9 @@ def run(seeds: Sequence[int] = (0, 1), n_ticks: int = 4, algo: str = "egp",
 
     per_scenario = {
         name: {
-            "mean_sigma": float(result["values"][name].mean()),
-            "min_sigma": float(result["values"][name].min()),
-            "max_sigma": float(result["values"][name].max()),
+            "mean_sigma": float(result.values[(name, algo)].mean()),
+            "min_sigma": float(result.values[(name, algo)].min()),
+            "max_sigma": float(result.values[(name, algo)].max()),
         }
         for name in names
     }
@@ -66,12 +75,15 @@ def run(seeds: Sequence[int] = (0, 1), n_ticks: int = 4, algo: str = "egp",
         "max_abs_diff": max_abs_diff,
         "batched_s": batched_s,
         "host_s": host_s,
+        "engine": result.execution,
         "per_scenario": per_scenario,
         "dynamic": dynamic,
     }
     if verbose:
+        ex = result.execution
         print(f"{n} instances across {len(names)} scenarios, algo={algo}")
-        print(f"batched (1 jitted call incl. compile): {batched_s:.3f}s; "
+        print(f"engine ({ex['chunks_computed']} chunk(s) via {ex['path']}, "
+              f"{ex['n_devices']} device(s), incl. compile): {batched_s:.3f}s; "
               f"host loop: {host_s:.3f}s; max|Δσ| = {max_abs_diff:.2e}")
         for name in names:
             s = per_scenario[name]

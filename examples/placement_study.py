@@ -10,6 +10,8 @@ from benchmarks import fig3_validation, fig4_scale, fig5_realworld
 print("== Fig 3: validation vs optimal (reduced) ==")
 s3 = fig3_validation.run(trials=2, verbose=False, literal_agp=False)
 for k, v in s3.items():
+    if not isinstance(v, dict):
+        continue  # engine cross-check scalars (e.g. engine_egp_max_abs_diff)
     print(f"  {k:5s} ratio={v['mean_ratio']:.3f} time={v['mean_time_s']*1e3:.1f}ms")
 print("  paper: EGP 0.904, AGP 0.900, SCK 0.607")
 

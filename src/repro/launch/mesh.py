@@ -30,8 +30,29 @@ def make_host_mesh(model: Optional[int] = None):
 
     n = len(jax.devices())
     model = model or 1
-    assert n % model == 0
+    if model <= 0 or n % model != 0:
+        raise ValueError(
+            f"cannot build a (data={n}//{model}, model={model}) mesh: the "
+            f"model-parallel degree must be a positive divisor of the "
+            f"{n} available device(s); pick a divisor of {n} or use "
+            f"make_sweep_mesh() for 1-D batch sharding")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_sweep_mesh(n_items: Optional[int] = None):
+    """A 1-D ``("data",)`` mesh for batch-sharded Monte-Carlo sweeps.
+
+    Picks the largest usable device count: all devices, capped at
+    ``n_items`` when given — sharding a chunk smaller than the machine
+    across every device would leave devices with zero rows, which
+    ``shard_map`` cannot express; capping instead lets uneven chunks pad up
+    to the next multiple of the mesh size (see repro.sweeps.shard).
+    """
+    import jax
+
+    n = len(jax.devices())
+    d = n if n_items is None else max(1, min(int(n_items), n))
+    return jax.make_mesh((d,), ("data",))
 
 
 def batch_axes(multi_pod: bool) -> Tuple[str, ...]:

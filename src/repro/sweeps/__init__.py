@@ -1,0 +1,28 @@
+"""repro.sweeps — device-sharded, resumable Monte-Carlo experiment engine.
+
+The production evaluation plane on top of :mod:`repro.workloads`:
+a :class:`SweepSpec` declares a (scenario × overrides × algorithm × seed ×
+tick) grid; :func:`run_sweep` expands it to a deterministic work list,
+skips items already in the append-only :class:`SweepStore`, chunks the
+rest to a memory budget, and evaluates accelerator chunks with
+``shard_map(vmap(...))`` across the mesh batch axis (plain jitted ``vmap``
+on one device — the two are bit-identical per item); :mod:`aggregate`
+reduces stored values to mean/std/95%-CI approximation-ratio tables.
+
+    python -m repro.sweeps --scenario flash_crowd --seeds 0:32
+"""
+from .aggregate import fig3_table, fig4_table, ratio_frame, summarize, table
+from .shard import (HOST_PARITY_ATOL, SweepResult, auto_chunk_size,
+                    bytes_per_item, run_sweep)
+from .spec import (ACCEL_ALGOS, HOST_ALGOS, SYNTHETIC, SweepSpec, WorkItem,
+                   envelope_for, materialize, variant_key)
+from .store import SweepStore
+
+__all__ = [
+    "SweepSpec", "WorkItem", "variant_key", "envelope_for", "materialize",
+    "ACCEL_ALGOS", "HOST_ALGOS", "SYNTHETIC",
+    "SweepStore",
+    "SweepResult", "run_sweep", "auto_chunk_size", "bytes_per_item",
+    "HOST_PARITY_ATOL",
+    "summarize", "table", "ratio_frame", "fig3_table", "fig4_table",
+]

@@ -1,0 +1,132 @@
+"""Append-only on-disk result store for resumable sweeps.
+
+Layout under the store root::
+
+    spec.json             # the spec that owns this store (informational)
+    manifest.jsonl        # one line per completed chunk (append-only)
+    shards/NNNNNN_<h>.npz # values/times/keys arrays for that chunk
+
+Each manifest line records the work-item keys a shard covers, so resume is
+*item*-granular: chunk boundaries may change between runs (different device
+count, different ``--chunk-size``) and previously computed items are still
+skipped. A shard's ``.npz`` is written and flushed **before** its manifest
+line is appended; a crash between the two leaves an orphan shard file that
+the next run simply ignores and recomputes — the manifest is always the
+source of truth, and no line in it ever dangles for longer than one
+``load`` (lines whose shard file is missing are dropped defensively).
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["SweepStore"]
+
+
+class SweepStore:
+    """Item-keyed, append-only npz/jsonl result store."""
+
+    def __init__(self, root: os.PathLike | str):
+        self.root = Path(root)
+        self.shard_dir = self.root / "shards"
+        self.manifest_path = self.root / "manifest.jsonl"
+        self.shard_dir.mkdir(parents=True, exist_ok=True)
+        #: item key -> (shard file name, row index)
+        self._index: Dict[str, tuple] = {}
+        #: item key -> manifest meta of its chunk
+        self._meta: Dict[str, Dict[str, Any]] = {}
+        self._n_lines = 0
+        self._npz_cache: Dict[str, Dict[str, np.ndarray]] = {}
+        self._load()
+
+    # ------------------------------------------------------------------
+    def _load(self) -> None:
+        if not self.manifest_path.exists():
+            return
+        for line in self.manifest_path.read_text().splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # torn final line from a killed writer
+            self._n_lines += 1
+            shard = rec.get("shard", "")
+            if not (self.shard_dir / shard).exists():
+                continue  # orphaned manifest entry; items will recompute
+            for row, key in enumerate(rec.get("keys", [])):
+                self._index[key] = (shard, row)
+                self._meta[key] = rec.get("meta", {})
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._index
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def completed(self, keys: Iterable[str]) -> List[str]:
+        return [k for k in keys if k in self._index]
+
+    # ------------------------------------------------------------------
+    def write_spec(self, spec_json: Mapping[str, Any]) -> None:
+        path = self.root / "spec.json"
+        if not path.exists():
+            path.write_text(json.dumps(spec_json, indent=1))
+
+    def add_chunk(self, keys: Sequence[str], values: np.ndarray,
+                  times: np.ndarray,
+                  meta: Optional[Mapping[str, Any]] = None) -> str:
+        """Persist one evaluated chunk; returns the shard file name."""
+        assert len(keys) == len(values) == len(times)
+        name = f"{self._n_lines:06d}_{keys[0][:8]}.npz"
+        while (self.shard_dir / name).exists():  # torn-line index reuse
+            self._n_lines += 1
+            name = f"{self._n_lines:06d}_{keys[0][:8]}.npz"
+        path = self.shard_dir / name
+        with open(path, "wb") as f:
+            np.savez(f, values=np.asarray(values, np.float64),
+                     times=np.asarray(times, np.float64),
+                     keys=np.asarray(list(keys)))
+            f.flush()
+            os.fsync(f.fileno())
+        rec = {"shard": name, "keys": list(keys), "meta": dict(meta or {})}
+        with open(self.manifest_path, "a+b") as f:
+            # a writer killed mid-append can leave a torn final line with
+            # no newline; start on a fresh line so this record is not
+            # glued to (and lost with) the torn one
+            f.seek(0, os.SEEK_END)
+            if f.tell() > 0:
+                f.seek(-1, os.SEEK_END)
+                if f.read(1) != b"\n":
+                    f.write(b"\n")
+            f.write((json.dumps(rec, separators=(",", ":")) + "\n").encode())
+            f.flush()
+            os.fsync(f.fileno())
+        self._n_lines += 1
+        for row, key in enumerate(keys):
+            self._index[key] = (name, row)
+            self._meta[key] = rec["meta"]
+        return name
+
+    # ------------------------------------------------------------------
+    def _shard(self, name: str) -> Dict[str, np.ndarray]:
+        if name not in self._npz_cache:
+            with np.load(self.shard_dir / name) as z:
+                self._npz_cache[name] = {k: z[k] for k in ("values", "times")}
+        return self._npz_cache[name]
+
+    def value(self, key: str) -> float:
+        shard, row = self._index[key]
+        return float(self._shard(shard)["values"][row])
+
+    def time(self, key: str) -> float:
+        shard, row = self._index[key]
+        return float(self._shard(shard)["times"][row])
+
+    def meta(self, key: str) -> Dict[str, Any]:
+        return dict(self._meta.get(key, {}))

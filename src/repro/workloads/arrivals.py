@@ -129,6 +129,29 @@ class TraceArrivals(ArrivalProcess):
     def from_sequence(cls, counts: Sequence[int]) -> "TraceArrivals":
         return cls(counts=tuple(int(c) for c in counts))
 
+    @classmethod
+    def from_file(cls, path) -> "TraceArrivals":
+        """Load a per-tick count trace from a text file.
+
+        Accepts one count per line or several per line, separated by
+        whitespace and/or commas (plain CSV). Lines starting with ``#`` and
+        blank lines are skipped; floats are truncated to ints (some traces
+        record average rates).
+        """
+        import os
+
+        counts = []
+        with open(os.fspath(path)) as f:
+            for line in f:
+                line = line.split("#", 1)[0].strip()
+                if not line:
+                    continue
+                for tok in line.replace(",", " ").split():
+                    counts.append(int(float(tok)))
+        if not counts:
+            raise ValueError(f"trace file {path!r} contains no counts")
+        return cls.from_sequence(counts)
+
     def rate_at(self, seed: int, tick: int) -> float:
         return float(self.counts[int(tick) % len(self.counts)])
 

@@ -42,6 +42,7 @@ from repro.core.scheduling import sigma_np
 __all__ = [
     "PaddedBatch",
     "pad_instances",
+    "single_evaluator",
     "evaluate_batch",
     "evaluate_host",
     "sweep",
@@ -132,10 +133,10 @@ def pad_instances(instances: Sequence[PIESInstance],
                        n_services=model_dummy + 1, dims=dims)
 
 
-def _build_evaluator(algo: str, n_services: int, max_iters: int):
-    import jax
-    import jax.numpy as jnp
-
+def single_evaluator(algo: str, n_services: int, max_iters: int):
+    """The per-instance evaluator ``JaxInstance -> (value, x)`` — the unit
+    that :func:`evaluate_batch` vmaps and :mod:`repro.sweeps.shard` wraps in
+    ``shard_map(vmap(...))`` across mesh batch axes."""
     from repro.core.placement import agp_place_jax, egp_place_jax
     from repro.core.qos import eligibility_jnp, qos_matrix_jnp
     from repro.core.scheduling import sigma_jnp
@@ -155,7 +156,13 @@ def _build_evaluator(algo: str, n_services: int, max_iters: int):
         value = sigma_jnp(Q, elig, inst.u_edge, x)
         return value, x
 
-    return jax.jit(jax.vmap(one))
+    return one
+
+
+def _build_evaluator(algo: str, n_services: int, max_iters: int):
+    import jax
+
+    return jax.jit(jax.vmap(single_evaluator(algo, n_services, max_iters)))
 
 
 @functools.lru_cache(maxsize=16)

@@ -16,12 +16,14 @@ dynamics, and an optional edge-failure schedule into a pure generator of
   surviving edge on the ring, exactly the paper's service-level recovery.
 
 Registered scenarios (``list_scenarios()``): ``steady``, ``diurnal``,
-``flash_crowd``, ``mobility_churn``, ``edge_failure``.
+``flash_crowd``, ``mobility_churn``, ``edge_failure``, ``trace_replay``
+(the bundled real-world-style day trace under ``examples/data/``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+from pathlib import Path
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -31,7 +33,7 @@ from repro.core.instance import (PIESInstance, draw_edge_capacities,
 from repro.distributed.elastic import ClusterState, recovery_plan
 
 from .arrivals import (ArrivalProcess, DiurnalArrivals, MMPPArrivals,
-                       PoissonArrivals)
+                       PoissonArrivals, TraceArrivals)
 from .population import ChurnModel, MarkovMobility, ZipfPopularity
 
 __all__ = [
@@ -286,6 +288,40 @@ def mobility_churn() -> Scenario:
         description="Ring random-walk mobility (p_move=0.3) plus fast churn "
                     "(mean lifetime 6 ticks): coverage sets mutate while "
                     "demand stays stationary in aggregate.",
+    )
+
+
+#: Fallback day trace (hourly counts) if examples/data/ is not shipped.
+_FALLBACK_DAY_TRACE = (18, 14, 11, 9, 8, 10, 16, 27, 44, 58, 66, 72,
+                       78, 74, 69, 63, 60, 65, 74, 86, 92, 81, 55, 31)
+
+
+def _bundled_day_trace() -> TraceArrivals:
+    # registration happens at import time, so a missing/corrupt trace file
+    # (partial checkout, installed package without examples/) must degrade
+    # to the identical built-in counts, never break `import repro.workloads`
+    path = Path(__file__).resolve().parents[3] / "examples" / "data" / \
+        "diurnal_trace.csv"
+    try:
+        return TraceArrivals.from_file(path)
+    except (OSError, ValueError):
+        return TraceArrivals(counts=_FALLBACK_DAY_TRACE)
+
+
+@register_scenario
+def trace_replay() -> Scenario:
+    """Replay the bundled real-world-style day trace, tick = one hour."""
+    return Scenario(
+        name="trace_replay",
+        arrivals=_bundled_day_trace(),
+        popularity_factory=lambda s: ZipfPopularity(
+            s, exponent=1.0, drift_period=12),
+        churn=ChurnModel(lifetime=16),
+        n_ticks=24,
+        description="Exact replay of the bundled 24-hour request-count "
+                    "trace (examples/data/diurnal_trace.csv): overnight "
+                    "trough, lunchtime plateau, evening peak — the first "
+                    "real-world-trace workload.",
     )
 
 

@@ -30,9 +30,32 @@ ALL_SCENARIOS = list_scenarios()
 # (seed, tick) determinism / seekability
 # ===========================================================================
 
-def test_registry_has_the_five_scenarios():
+def test_registry_has_the_registered_scenarios():
     assert set(ALL_SCENARIOS) == {"steady", "diurnal", "flash_crowd",
-                                  "mobility_churn", "edge_failure"}
+                                  "mobility_churn", "edge_failure",
+                                  "trace_replay"}
+
+
+def test_trace_arrivals_from_file(tmp_path):
+    p = tmp_path / "trace.csv"
+    p.write_text("# a comment\n5, 9 2\n\n7.8  # trailing comment\n")
+    tr = TraceArrivals.from_file(p)
+    assert tr.counts == (5, 9, 2, 7)
+    assert [tr.count_at(3, t) for t in range(5)] == [5, 9, 2, 7, 5]
+    import pytest as _pytest
+    empty = tmp_path / "empty.csv"
+    empty.write_text("# nothing\n")
+    with _pytest.raises(ValueError):
+        TraceArrivals.from_file(empty)
+
+
+def test_trace_replay_scenario_follows_bundled_trace():
+    sc = get_scenario("trace_replay")
+    assert isinstance(sc.arrivals, TraceArrivals)
+    assert sc.n_ticks == 24
+    counts = [sc.active_users_at(0, t) for t in range(24)]
+    assert counts == list(sc.arrivals.counts)[:24]  # exact replay
+    assert max(counts) >= 2 * min(counts)  # a real day shape, not flat
 
 
 @pytest.mark.parametrize("name", ALL_SCENARIOS)
@@ -187,7 +210,7 @@ def test_sweep_runs_all_scenarios_in_one_call():
     for name in ALL_SCENARIOS:
         assert res["values"][name].shape == (1, 2)
         assert np.all(res["values"][name] > 0)
-    assert len(res["labels"]) == len(res["instances"]) == 10
+    assert len(res["labels"]) == len(res["instances"]) == 2 * len(ALL_SCENARIOS)
 
 
 # ===========================================================================
