@@ -93,6 +93,22 @@ def main() -> None:
          f";paper=exclusively_mobilenet"
          f";qos_egp={s5['mean_qos']['egp']:.3f}")
 
+    from benchmarks import serving_horizon
+    t0 = time.perf_counter()
+    sv = serving_horizon.run(seeds=(0,) if not args.full else (0, 1, 2, 3),
+                             n_ticks=3 if not args.full else 6,
+                             verbose=False)
+    dt = (time.perf_counter() - t0) * 1e6 / sv["n_runs"]
+    edf = sv["per_cell"][("flash_crowd", "edf")]
+    fcfs = sv["per_cell"][("flash_crowd", "fcfs")]
+    steady = sv["per_cell"][("steady", "edf")]
+    emit("serving_horizon", dt,
+         f"flash_qos_edf={edf['mean_realized_qos']:.4f}"
+         f";flash_miss_edf={edf['miss_rate']:.3f}"
+         f";flash_miss_fcfs={fcfs['miss_rate']:.3f}"
+         f";steady_qos_edf={steady['mean_realized_qos']:.4f}"
+         f";dropped={edf['dropped']}")
+
     sc = scenarios.run(seeds=(0, 1) if not args.full else (0, 1, 2, 3),
                        n_ticks=4 if not args.full else 8, verbose=False)
     # us_per_call is the engine's chunked accelerator evaluation (incl.

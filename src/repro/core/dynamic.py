@@ -82,6 +82,11 @@ class DynamicPlacer:
 
     def __post_init__(self):
         self._resident: Optional[np.ndarray] = None
+        #: [E, P] bool — implementations newly loaded by the latest step()
+        #: (the mask behind its n_loads); consumers that *realize* loads
+        #: (the serving horizon's cold-start gating) read this instead of
+        #: shadowing the resident-set bookkeeping.
+        self.new_loads: Optional[np.ndarray] = None
 
     def step(self, inst: PIESInstance, Q: Optional[np.ndarray] = None):
         """One control tick: returns (x, value, n_loads)."""
@@ -90,7 +95,8 @@ class DynamicPlacer:
         if self._resident is None:
             self._resident = np.zeros((inst.E, inst.P), dtype=bool)
         x = _egp_with_bias(inst, Q, self._resident, self.stickiness)
-        loads = int((x & ~self._resident).sum())
+        self.new_loads = x & ~self._resident
+        loads = int(self.new_loads.sum())
         value = sigma_np(inst, x, Q) - self.switching_cost * loads
         self._resident = x
         return x, value, loads

@@ -21,8 +21,10 @@ import numpy as np
 from .instance import PIESInstance, JaxInstance
 
 __all__ = [
+    "accuracy_satisfaction_elem_np",
     "accuracy_satisfaction_np",
     "delay_np",
+    "delay_satisfaction_elem_np",
     "delay_satisfaction_np",
     "qos_matrix_np",
     "eligibility_np",
@@ -35,10 +37,16 @@ __all__ = [
 # NumPy reference
 # ===========================================================================
 
+def accuracy_satisfaction_elem_np(A, alpha) -> np.ndarray:
+    """Eq. (2) with broadcasting left to the caller — the single source of
+    the accuracy-satisfaction formula (matrix *and* per-request paths)."""
+    diff = np.asarray(alpha, np.float64) - np.asarray(A, np.float64)
+    return np.where(diff <= 0.0, 1.0, np.maximum(0.0, 1.0 - diff))
+
+
 def accuracy_satisfaction_np(A: np.ndarray, alpha: np.ndarray) -> np.ndarray:
     """Eq. (2): ``â_sm(u)`` — broadcasts ``A`` [P] against ``alpha`` [U]."""
-    diff = alpha[:, None] - A[None, :]
-    return np.where(diff <= 0.0, 1.0, np.maximum(0.0, 1.0 - diff))
+    return accuracy_satisfaction_elem_np(A[None, :], alpha[:, None])
 
 
 def delay_np(inst: PIESInstance) -> np.ndarray:
@@ -52,11 +60,18 @@ def delay_np(inst: PIESInstance) -> np.ndarray:
     )
 
 
+def delay_satisfaction_elem_np(D, delta, delta_max: float) -> np.ndarray:
+    """Eq. (3) with broadcasting left to the caller (expected *or*
+    realized delay against the threshold)."""
+    over = np.asarray(D, np.float64) - np.asarray(delta, np.float64)
+    return np.where(over <= 0.0, 1.0,
+                    np.maximum(0.0, 1.0 - over / float(delta_max)))
+
+
 def delay_satisfaction_np(D: np.ndarray, delta: np.ndarray,
                           delta_max: float) -> np.ndarray:
     """Eq. (3): ``d̂_sm(u)`` from the delay matrix [U, P]."""
-    over = D - delta[:, None]
-    return np.where(over <= 0.0, 1.0, np.maximum(0.0, 1.0 - over / delta_max))
+    return delay_satisfaction_elem_np(D, delta[:, None], delta_max)
 
 
 def eligibility_np(inst: PIESInstance) -> np.ndarray:

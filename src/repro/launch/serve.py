@@ -31,6 +31,7 @@ def run_serving(n_users: int = 48, n_edges: int = 2, seed: int = 0,
     report = cluster.serve(inst, prompts, max_new_tokens=max_new_tokens)
     if verbose:
         print(f"[serve] served={report.served} dropped={report.dropped} "
+              f"skipped={report.skipped} "
               f"expectedQoS={report.mean_expected_qos:.3f} "
               f"realizedQoS={report.mean_realized_qos:.3f} "
               f"wall={report.total_wall_s:.1f}s")

@@ -6,3 +6,5 @@ from .engine import ModelServer, Request
 from .cluster import EdgeCluster, ServeReport
 from .scheduler import (ArrivingRequest, ContinuousScheduler,
                         ExecutorProfile, simulate)
+from .horizon import (HorizonConfig, HorizonResult, TickReport,
+                      run_horizon, split_serving_overrides)

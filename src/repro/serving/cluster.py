@@ -19,10 +19,10 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import PIESInstance
-from repro.core.qos import accuracy_satisfaction_np
 from .catalog import Catalog
 from .engine import ModelServer, Request
 from .router import Router, RoutingDecision
+from .scheduler import realized_qos_np
 
 __all__ = ["EdgeCluster", "ServeReport"]
 
@@ -31,6 +31,8 @@ __all__ = ["EdgeCluster", "ServeReport"]
 class ServeReport:
     served: int
     dropped: int
+    skipped: int                # assigned but never executed (no resident
+                                # server for the impl on the user's edge)
     mean_expected_qos: float    # from the QoS model (router view)
     mean_realized_qos: float    # from measured latency + catalog accuracy
     per_model_counts: Dict[str, int]
@@ -86,6 +88,7 @@ class EdgeCluster:
             g.load_placement(x[g.gid], self.catalog)
 
         realized = np.zeros(inst.U)
+        executed = np.zeros(inst.U, dtype=bool)
         counts: Dict[str, int] = {}
         served = 0
         for e, group in enumerate(self.groups):
@@ -105,20 +108,22 @@ class EdgeCluster:
                     latency = time.perf_counter() - t_b
                     # realized QoS: Eq. (1) with measured latency
                     acc = self.catalog.models[p].accuracy
-                    a_hat = accuracy_satisfaction_np(
-                        np.array([acc]), inst.u_alpha[batch_uids])[:, 0]
-                    over = latency - inst.u_delta[batch_uids]
-                    d_hat = np.where(over <= 0, 1.0,
-                                     np.maximum(0.0, 1 - over / inst.delta_max))
-                    realized[batch_uids] = 0.5 * (a_hat + d_hat)
+                    realized[batch_uids], _ = realized_qos_np(
+                        latency, inst.u_delta[batch_uids], acc,
+                        inst.u_alpha[batch_uids], inst.delta_max)
+                    executed[batch_uids] = True
                     served += batch_uids.size
                 name = self.catalog.models[p].arch
                 counts[name] = counts.get(name, 0) + int(uids.size)
         dropped = int((decision.assignment < 0).sum())
+        # a user can be assigned an implementation whose server is not
+        # resident on its edge (placement row loaded elsewhere): it never
+        # executed, so its zero entry must not deflate the realized mean
+        skipped = int(((decision.assignment >= 0) & ~executed).sum())
         return ServeReport(
-            served=served, dropped=dropped,
+            served=served, dropped=dropped, skipped=skipped,
             mean_expected_qos=float(decision.expected_qos.mean()),
-            mean_realized_qos=float(realized[decision.assignment >= 0].mean())
+            mean_realized_qos=float(realized[executed].mean())
             if served else 0.0,
             per_model_counts=counts, placement=x,
             total_wall_s=time.perf_counter() - t0)

@@ -1,0 +1,271 @@
+"""Multi-tick serving driver: scenario traffic through the full engine.
+
+The analytic pipeline (``repro.sweeps`` kind ``"sigma"``) scores
+placements with the closed-form objective σ — *expected* QoS under the
+paper's delay model. This module instead drives every registered
+:mod:`repro.workloads` scenario end-to-end through the serving engine and
+scores **realized** QoS from simulated serving latency, the way the
+paper's real-world experiment (§VI-C) does with measured latency:
+
+per control tick, :func:`run_horizon`
+
+1. materializes the tick's :class:`~repro.core.instance.PIESInstance`
+   from the scenario (arrival counts + population dynamics);
+2. re-places via :class:`~repro.core.dynamic.DynamicPlacer` (EGP with
+   hysteresis — switching costs and a stickiness bonus for resident
+   implementations); switching cost is *realized*, not just booked:
+   a newly placed implementation spends ``switching_cost`` seconds
+   loading and serves nothing until then, so placement churn costs
+   real latency (cold starts) and hysteresis pays off measurably;
+3. routes each request with OMS (Alg. 1) under the tick's placement;
+4. submits the tick's requests — timestamped by the scenario's arrival
+   process *within* the tick window — into one **stateful**
+   :class:`~repro.serving.scheduler.ContinuousScheduler` whose queues and
+   in-flight batches survive tick boundaries (backlog from a flash crowd
+   spills into the next tick, exactly like a real engine).
+
+Each tick emits a :class:`TickReport` (realized QoS, deadline misses,
+queue depth, in-flight count, model loads); requests are *attributed to
+their arrival tick* even when they finish later, and dropped requests
+(OMS returns −1: no placed implementation of the requested service)
+score 0 QoS — so ``per_tick[t].mean_realized_qos`` is an unconditional
+per-tick service-quality number and conservation holds exactly
+(``served + dropped == submitted``).
+
+Everything is a pure function of ``(config, seed)``: same seed →
+byte-identical per-request finish times, which is what lets
+``repro.sweeps`` (kind ``"serving"``) resume killed sweeps item-granularly
+by replaying a seed's horizon.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dynamic import DynamicPlacer
+from repro.core.qos import qos_matrix_np
+from repro.core.scheduling import oms_np
+
+from .scheduler import (ArrivingRequest, ContinuousScheduler,
+                        ExecutorProfile, realized_qos_np)
+
+__all__ = ["SERVING_PARAM_KEYS", "HorizonConfig", "TickReport",
+           "HorizonResult", "run_horizon", "split_serving_overrides"]
+
+#: Override keys consumed by the serving driver (everything else is a
+#: scenario/instance override). The sweep spec routes a flat override
+#: mapping through :func:`split_serving_overrides` so one ``--override``
+#: grammar covers both layers.
+SERVING_PARAM_KEYS = ("switching_cost", "stickiness", "tick_duration",
+                      "prompt_tokens", "new_tokens", "max_batch")
+
+
+def split_serving_overrides(
+        overrides: Mapping[str, Any] | Tuple[Tuple[str, Any], ...]
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Split a flat override mapping into (scenario, serving) key sets."""
+    items = dict(overrides)
+    serving = {k: v for k, v in items.items() if k in SERVING_PARAM_KEYS}
+    scenario = {k: v for k, v in items.items() if k not in SERVING_PARAM_KEYS}
+    return scenario, serving
+
+
+@dataclasses.dataclass(frozen=True)
+class HorizonConfig:
+    """One serving-horizon run = (scenario, policy, placer knobs, seed)."""
+
+    scenario: str = "steady"
+    overrides: Tuple[Tuple[str, Any], ...] = ()   # scenario-level overrides
+    policy: str = "edf"             # continuous-batching queue policy
+    #: DynamicPlacer's QoS-units switching cost — and, *realized*, the
+    #: model-load latency in seconds: a newly placed implementation cannot
+    #: serve until ``switching_cost`` seconds into its tick (arrivals
+    #: queue meanwhile), so churny placements pay a cold-start penalty in
+    #: realized QoS and the (switching_cost × stickiness) sweep grid
+    #: measures a real trade-off, not a bookkeeping discount.
+    switching_cost: float = 2.0
+    stickiness: float = 3.0         # DynamicPlacer: resident benefit bonus
+    seed: int = 0
+    n_ticks: Optional[int] = None   # default: the scenario's horizon
+    tick_duration: float = 1.0      # seconds of serving time per tick
+    prompt_tokens: int = 128
+    new_tokens: int = 32
+    max_batch: int = 8
+
+    @classmethod
+    def from_overrides(cls, scenario: str, overrides, policy: str,
+                       seed: int, n_ticks: Optional[int] = None
+                       ) -> "HorizonConfig":
+        """Build a config from a flat sweep-style override mapping."""
+        scen_ov, serving = split_serving_overrides(overrides)
+        return cls(scenario=scenario,
+                   overrides=tuple(sorted(scen_ov.items())),
+                   policy=policy, seed=int(seed), n_ticks=n_ticks,
+                   **serving)
+
+
+@dataclasses.dataclass
+class TickReport:
+    """Realized serving statistics of one control tick (arrival-attributed)."""
+
+    tick: int
+    submitted: int            # requests arriving this tick (inst.U)
+    served: int               # submitted − dropped (all eventually finish)
+    dropped: int              # OMS −1: no placed impl of the service
+    mean_realized_qos: float  # over ALL submitted (dropped score 0)
+    deadline_misses: int
+    mean_latency_s: float     # over served requests (NaN if none)
+    queue_depth: int          # backlog queued at the tick boundary
+    in_flight: int            # sequences still running at the boundary
+    model_loads: int          # newly loaded implementations this tick
+    placement_value: float    # DynamicPlacer value (σ − switching·loads)
+
+
+@dataclasses.dataclass
+class HorizonResult:
+    config: HorizonConfig
+    per_tick: List[TickReport]
+    requests: List[ArrivingRequest]   # every served request, finish set
+
+    # -- horizon-level aggregates -----------------------------------------
+    @property
+    def submitted(self) -> int:
+        return sum(t.submitted for t in self.per_tick)
+
+    @property
+    def served(self) -> int:
+        return sum(t.served for t in self.per_tick)
+
+    @property
+    def dropped(self) -> int:
+        return sum(t.dropped for t in self.per_tick)
+
+    @property
+    def deadline_misses(self) -> int:
+        return sum(t.deadline_misses for t in self.per_tick)
+
+    @property
+    def mean_realized_qos(self) -> float:
+        """Submission-weighted mean over the whole horizon."""
+        n = self.submitted
+        return float(sum(t.mean_realized_qos * t.submitted
+                         for t in self.per_tick) / n) if n else 0.0
+
+    @property
+    def miss_rate(self) -> float:
+        return self.deadline_misses / self.served if self.served else 0.0
+
+    def tick_values(self) -> np.ndarray:
+        """[T] per-tick mean realized QoS — the sweep-item values."""
+        return np.array([t.mean_realized_qos for t in self.per_tick],
+                        np.float64)
+
+
+def _arrival_times(scenario, seed: int, tick: int, n: int,
+                   tick_duration: float) -> np.ndarray:
+    """``n`` arrival timestamps inside tick ``tick``'s window.
+
+    The scenario's arrival process supplies the offsets; the active
+    population is its count clipped to the slot pool, so surplus arrivals
+    are truncated and a shortfall (count 0 → the 1-user floor) is padded
+    with deterministic mid-tick timestamps.
+    """
+    times = np.asarray(scenario.arrivals.times_in_tick(
+        seed, tick, tick_duration), np.float64)
+    if times.size < n:
+        pad = (tick + (np.arange(times.size, n) + 0.5) / n) * tick_duration
+        times = np.sort(np.concatenate([times, pad]))
+    return times[:n]
+
+
+def run_horizon(config: HorizonConfig) -> HorizonResult:
+    """Drive one scenario horizon through placement → routing → serving."""
+    from repro.workloads import get_scenario  # deferred: workloads uses core
+
+    sc = get_scenario(config.scenario, **dict(config.overrides))
+    T = int(config.n_ticks or sc.n_ticks)
+    placer = DynamicPlacer(config.switching_cost, config.stickiness)
+    sched = ContinuousScheduler(policy=config.policy)
+
+    mobility_cache = sc.mobility_trajectory(config.seed, T)
+
+    tick_reqs: List[List[ArrivingRequest]] = []
+    meta: List[Dict[str, Any]] = []
+    boundary: List[Tuple[int, int]] = []   # (queue_depth, in_flight) per tick
+    uid = 0
+    for t in range(T):
+        inst = sc.instance_at(config.seed, t, mobility_cache=mobility_cache)
+        Q = qos_matrix_np(inst)
+        x, value, loads = placer.step(inst, Q)
+        # cold starts: every implementation the placer just loaded spends
+        # the first switching_cost seconds of the tick loading and serves
+        # nothing until then — gated up front, so an impl placed now but
+        # first routed to next tick still queues through its load window
+        if config.switching_cost > 0.0:
+            ready_at = t * config.tick_duration + config.switching_cost
+            for e, p in np.argwhere(placer.new_loads):
+                key = (int(e), int(p))
+                sched.add_executor(key, ExecutorProfile.from_comp_cost(
+                    float(inst.sm_w[p]), config.max_batch))
+                sched.delay_executor(key, ready_at)
+        y, _ = oms_np(inst, x, Q)
+
+        times = _arrival_times(sc, config.seed, t, inst.U,
+                               config.tick_duration)
+        reqs: List[ArrivingRequest] = []
+        for u in range(inst.U):
+            p = int(y[u])
+            if p < 0:
+                continue
+            e = int(inst.u_edge[u])
+            if (e, p) not in sched.executors:
+                sched.add_executor(
+                    (e, p), ExecutorProfile.from_comp_cost(
+                        float(inst.sm_w[p]), config.max_batch))
+            reqs.append(ArrivingRequest(
+                uid=uid + u, impl=p, edge=e, arrival=float(times[u]),
+                prompt_tokens=config.prompt_tokens,
+                new_tokens=config.new_tokens,
+                alpha=float(inst.u_alpha[u]), delta=float(inst.u_delta[u]),
+                accuracy=float(inst.sm_acc[p])))
+        uid += inst.U
+        sched.submit(reqs)
+        sched.run_until((t + 1) * config.tick_duration)
+
+        tick_reqs.append(reqs)
+        boundary.append((sched.queue_depth(), sched.in_flight()))
+        meta.append({"submitted": inst.U, "dropped": int((y < 0).sum()),
+                     "loads": loads, "value": float(value),
+                     "delta_max": float(inst.delta_max)})
+
+    # Backlog left at the horizon end drains to completion (graceful
+    # shutdown); its requests stay attributed to their arrival ticks.
+    sched.drain()
+
+    per_tick: List[TickReport] = []
+    for t in range(T):
+        reqs, m = tick_reqs[t], meta[t]
+        if reqs:
+            lats = np.maximum(
+                np.array([r.finish - r.arrival for r in reqs]), 0.0)
+            qos, missed = realized_qos_np(
+                lats, np.array([r.delta for r in reqs]),
+                np.array([r.accuracy for r in reqs]),
+                np.array([r.alpha for r in reqs]), m["delta_max"])
+        else:
+            lats, qos, missed = np.zeros(0), np.zeros(0), np.zeros(0, bool)
+        per_tick.append(TickReport(
+            tick=t, submitted=m["submitted"], served=len(reqs),
+            dropped=m["dropped"],
+            # dropped requests contribute 0 — divide by ALL submitted
+            mean_realized_qos=float(qos.sum() / m["submitted"])
+            if m["submitted"] else 0.0,
+            deadline_misses=int(missed.sum()),
+            mean_latency_s=float(lats.mean()) if reqs else float("nan"),
+            queue_depth=boundary[t][0], in_flight=boundary[t][1],
+            model_loads=m["loads"], placement_value=m["value"]))
+
+    return HorizonResult(config=config, per_tick=per_tick,
+                         requests=[r for reqs in tick_reqs for r in reqs])

@@ -16,22 +16,57 @@ top of the PIES assignment:
 * per-implementation latency comes from the catalog profile
   (prefill ∝ prompt tokens, decode ∝ steps, both scaled by comp_cost).
 
-Everything is a deterministic discrete-event simulation (no wall clock),
-so policies are comparable and unit-testable.
+The simulation is a **single global event heap** over all executors:
+arrivals and request completions are explicit events ordered by
+``(time, seq)`` where ``seq`` is a monotone submission counter, so equal
+timestamps resolve deterministically and request objects are never
+compared. Executors only hold state (a policy-ordered queue plus the
+in-flight set); all timing flows through the scheduler's heap. This is
+what makes the scheduler *incremental*: :meth:`ContinuousScheduler
+.run_until` advances the clock to a tick boundary and returns with queues
+and in-flight batches intact, so a multi-tick driver
+(:mod:`repro.serving.horizon`) can interleave re-placement and routing
+with serving without losing backlog. Everything is a deterministic
+discrete-event simulation (no wall clock), so policies are comparable,
+resumable sweeps get byte-identical replays, and unit tests can pin exact
+finish times.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Tuple
+import math
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.instance import PIESInstance
-from repro.core.qos import accuracy_satisfaction_np
+from repro.core.qos import (accuracy_satisfaction_elem_np,
+                            delay_satisfaction_elem_np)
 
 __all__ = ["ArrivingRequest", "ExecutorProfile", "ContinuousScheduler",
-           "simulate"]
+           "realized_qos_np", "simulate"]
+
+
+def realized_qos_np(latency, delta, accuracy, alpha, delta_max: float):
+    """Eq. (1) scored with *realized* latency, elementwise.
+
+    The single source of the realized-QoS blend for every serving surface
+    (``simulate``, the horizon driver, the edge-cluster harness): accuracy
+    satisfaction (Eq. 2) against the request's α, delay satisfaction
+    (Eq. 3) against measured latency, averaged. Returns ``(qos, missed)``
+    where ``missed`` marks deadline overruns.
+    """
+    latency = np.maximum(np.asarray(latency, np.float64), 0.0)
+    a_hat = accuracy_satisfaction_elem_np(accuracy, alpha)
+    d_hat = delay_satisfaction_elem_np(latency, delta, delta_max)
+    missed = latency > np.asarray(delta, np.float64)
+    return 0.5 * (a_hat + d_hat), missed
+
+#: Occupancy slowdown per already-running sequence in the batch.
+_CONTENTION = 0.15
+
+_ARRIVE, _FINISH, _KICK = 0, 1, 2
 
 
 @dataclasses.dataclass
@@ -67,63 +102,148 @@ class ExecutorProfile:
 
 
 class _Executor:
-    """One (edge, impl) continuous-batching executor (discrete-event)."""
+    """Queue + in-flight set of one (edge, impl) pair.
+
+    Pure state: admission computes start/finish times, but *when* a slot
+    frees is decided by the scheduler's global event heap — the executor
+    never filters or re-orders an implicit timing structure (the old
+    design kept a per-executor `(finish, request)` heap and rebuilt it
+    with a list comprehension, which silently broke the heap invariant
+    and crashed on equal finish times).
+    """
 
     def __init__(self, profile: ExecutorProfile, policy: str):
         self.profile = profile
         self.policy = policy
         self.queue: List[Tuple[float, int, ArrivingRequest]] = []
-        self.running: List[Tuple[float, ArrivingRequest]] = []  # (finish, r)
+        self.running: Dict[int, ArrivingRequest] = {}   # uid -> in-flight
+        self.available_from = 0.0   # model-load gate (see delay_executor)
 
     def _key(self, r: ArrivingRequest) -> float:
         if self.policy == "edf":
             return r.arrival + r.delta     # absolute deadline
         return r.arrival                   # FCFS
 
-    def submit(self, r: ArrivingRequest):
+    def submit(self, r: ArrivingRequest) -> None:
         heapq.heappush(self.queue, (self._key(r), r.uid, r))
 
-    def step(self, now: float) -> Optional[float]:
-        """Admit queued work into free slots; return next event time."""
-        self.running = [(f, r) for f, r in self.running if f > now]
+    def admit(self, now: float) -> List[ArrivingRequest]:
+        """Start queued work in free slots; returns newly started requests."""
+        if now < self.available_from:
+            return []                # model still loading; work queues
+        started = []
         while self.queue and len(self.running) < self.profile.max_batch:
             _, _, r = heapq.heappop(self.queue)
-            r.start = now
             dur = (r.prompt_tokens * self.profile.prefill_per_token_s
                    + r.new_tokens * self.profile.decode_per_step_s)
             # batch contention: effective slowdown grows with occupancy
-            dur *= 1.0 + 0.15 * len(self.running)
+            dur *= 1.0 + _CONTENTION * len(self.running)
+            r.start = now
             r.finish = now + dur
-            heapq.heappush(self.running, (r.finish, r))
-        if self.running:
-            return self.running[0][0]
-        return None
+            self.running[r.uid] = r
+            started.append(r)
+        return started
+
+    def complete(self, r: ArrivingRequest) -> None:
+        del self.running[r.uid]
 
 
 class ContinuousScheduler:
-    def __init__(self, profiles: Dict[Tuple[int, int], ExecutorProfile],
+    """Event-driven continuous batching over a set of executors.
+
+    Stateful by design: ``submit`` + ``run_until(t)`` advance the event
+    clock to ``t`` and leave queued/in-flight requests in place, so ticks
+    of a control horizon share one scheduler. ``run`` keeps the one-shot
+    batch interface (submit everything, drain, return).
+    """
+
+    def __init__(self,
+                 profiles: Optional[Dict[Tuple[int, int],
+                                         ExecutorProfile]] = None,
                  policy: str = "edf"):
-        self.executors = {key: _Executor(p, policy)
-                          for key, p in profiles.items()}
+        if policy not in ("edf", "fcfs"):
+            raise ValueError(f"unknown policy {policy!r}; use 'edf'|'fcfs'")
+        self.policy = policy
+        self.executors: Dict[Tuple[int, int], _Executor] = {}
+        #: (time, seq, kind, key, request|None) — the single global event
+        #: heap; seq breaks timestamp ties so payloads are never compared
+        self._events: List[Tuple[float, int, int, Tuple[int, int],
+                                 Optional[ArrivingRequest]]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.n_submitted = 0
+        self.completed: List[ArrivingRequest] = []
+        for key, p in (profiles or {}).items():
+            self.add_executor(key, p)
+
+    # -- executor registry (placements appear mid-horizon) -----------------
+    def add_executor(self, key: Tuple[int, int],
+                     profile: ExecutorProfile) -> None:
+        """Register (edge, impl); idempotent — live queues are kept."""
+        if key not in self.executors:
+            self.executors[key] = _Executor(profile, self.policy)
+
+    def delay_executor(self, key: Tuple[int, int], until: float) -> None:
+        """Gate (edge, impl) behind a model load finishing at ``until``:
+        nothing is admitted before then (arrivals queue), and a kick event
+        re-runs admission the moment the load completes."""
+        ex = self.executors[key]
+        ex.available_from = max(ex.available_from, float(until))
+        self._push(ex.available_from, _KICK, key, None)
+
+    # -- observability -----------------------------------------------------
+    def queue_depth(self) -> int:
+        return sum(len(ex.queue) for ex in self.executors.values())
+
+    def in_flight(self) -> int:
+        return sum(len(ex.running) for ex in self.executors.values())
+
+    def backlog(self) -> int:
+        """Submitted but not yet finished (queued + in-flight)."""
+        return self.n_submitted - len(self.completed)
+
+    # -- event machinery ---------------------------------------------------
+    def _push(self, time: float, kind: int, key: Tuple[int, int],
+              r: Optional[ArrivingRequest]) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (time, self._seq, kind, key, r))
+
+    def submit(self, requests: Iterable[ArrivingRequest]) -> None:
+        for r in requests:
+            key = (r.edge, r.impl)
+            if key not in self.executors:
+                raise KeyError(f"no executor registered for (edge, impl)="
+                               f"{key}; call add_executor first")
+            self.n_submitted += 1
+            self._push(r.arrival, _ARRIVE, key, r)
+
+    def _admit(self, key: Tuple[int, int], now: float) -> None:
+        for started in self.executors[key].admit(now):
+            self._push(started.finish, _FINISH, key, started)
+
+    def run_until(self, t_end: float) -> None:
+        """Process every event with ``time ≤ t_end``; keep the rest."""
+        while self._events and self._events[0][0] <= t_end:
+            now, _, kind, key, r = heapq.heappop(self._events)
+            if kind == _ARRIVE:
+                self.executors[key].submit(r)
+            elif kind == _FINISH:
+                self.executors[key].complete(r)
+                self.completed.append(r)
+            # _KICK carries no payload — it exists to re-run admission
+            self._admit(key, now)
+            self.now = max(self.now, now)
+        if math.isfinite(t_end):  # drain(∞) leaves the last event time
+            self.now = max(self.now, t_end)
+
+    def drain(self) -> None:
+        """Run to completion (no more events)."""
+        self.run_until(float("inf"))
 
     def run(self, requests: List[ArrivingRequest]) -> List[ArrivingRequest]:
-        """Event loop: arrivals + completion ticks, until drained."""
-        events: List[Tuple[float, int, Tuple]] = []
-        seq = 0
-        for r in requests:
-            seq += 1
-            heapq.heappush(events, (r.arrival, seq, ("arrive", r)))
-        while events:
-            now, _, (kind, payload) = heapq.heappop(events)
-            if kind == "arrive":
-                key = (payload.edge, payload.impl)
-                self.executors[key].submit(payload)
-            else:
-                key = payload
-            nxt = self.executors[key].step(now)
-            if nxt is not None and nxt > now:
-                seq += 1
-                heapq.heappush(events, (nxt, seq, ("tick", key)))
+        """One-shot: submit everything, drain, return the requests."""
+        self.submit(requests)
+        self.drain()
         return requests
 
 
@@ -156,7 +276,7 @@ def simulate(inst: PIESInstance, assignment: np.ndarray, comp_cost,
     else:
         arrival_times = np.cumsum(
             rng.exponential(1.0 / arrival_rate, size=inst.U))
-    profiles: Dict[Tuple[int, int], ExecutorProfile] = {}
+    sched = ContinuousScheduler(policy=policy)
     reqs: List[ArrivingRequest] = []
     for u in range(inst.U):
         t = float(arrival_times[u])
@@ -164,31 +284,29 @@ def simulate(inst: PIESInstance, assignment: np.ndarray, comp_cost,
         if p < 0:
             continue
         e = int(inst.u_edge[u])
-        profiles.setdefault(
-            (e, p), ExecutorProfile.from_comp_cost(float(comp_cost[p]),
-                                                   max_batch))
+        if (e, p) not in sched.executors:
+            sched.add_executor(
+                (e, p), ExecutorProfile.from_comp_cost(float(comp_cost[p]),
+                                                       max_batch))
         reqs.append(ArrivingRequest(
             uid=u, impl=p, edge=e, arrival=t,
             prompt_tokens=prompt_tokens, new_tokens=new_tokens,
             alpha=float(inst.u_alpha[u]), delta=float(inst.u_delta[u]),
             accuracy=float(inst.sm_acc[p])))
 
-    sched = ContinuousScheduler(profiles, policy)
     sched.run(reqs)
 
-    qos, misses = [], 0
-    for r in reqs:
-        latency = max(r.finish - r.arrival, 0.0)
-        a_hat = float(accuracy_satisfaction_np(
-            np.array([r.accuracy]), np.array([r.alpha]))[0, 0])
-        over = latency - r.delta
-        d_hat = 1.0 if over <= 0 else max(0.0, 1.0 - over / delta_max)
-        if over > 0:
-            misses += 1
-        qos.append(0.5 * (a_hat + d_hat))
+    if reqs:
+        qos, missed = realized_qos_np(
+            np.array([r.finish - r.arrival for r in reqs]),
+            np.array([r.delta for r in reqs]),
+            np.array([r.accuracy for r in reqs]),
+            np.array([r.alpha for r in reqs]), delta_max)
+    else:
+        qos, missed = np.zeros(0), np.zeros(0, bool)
     return {
-        "mean_qos": float(np.mean(qos)) if qos else 0.0,
-        "p10_qos": float(np.percentile(qos, 10)) if qos else 0.0,
-        "deadline_misses": misses,
+        "mean_qos": float(qos.mean()) if reqs else 0.0,
+        "p10_qos": float(np.percentile(qos, 10)) if reqs else 0.0,
+        "deadline_misses": int(missed.sum()),
         "served": len(reqs),
     }

@@ -14,13 +14,14 @@ reduces stored values to mean/std/95%-CI approximation-ratio tables.
 from .aggregate import fig3_table, fig4_table, ratio_frame, summarize, table
 from .shard import (HOST_PARITY_ATOL, SweepResult, auto_chunk_size,
                     bytes_per_item, run_sweep)
-from .spec import (ACCEL_ALGOS, HOST_ALGOS, SYNTHETIC, SweepSpec, WorkItem,
-                   envelope_for, materialize, variant_key)
+from .spec import (ACCEL_ALGOS, HOST_ALGOS, KINDS, SERVING_POLICIES,
+                   SYNTHETIC, SweepSpec, WorkItem, envelope_for, materialize,
+                   variant_key)
 from .store import SweepStore
 
 __all__ = [
     "SweepSpec", "WorkItem", "variant_key", "envelope_for", "materialize",
-    "ACCEL_ALGOS", "HOST_ALGOS", "SYNTHETIC",
+    "ACCEL_ALGOS", "HOST_ALGOS", "KINDS", "SERVING_POLICIES", "SYNTHETIC",
     "SweepStore",
     "SweepResult", "run_sweep", "auto_chunk_size", "bytes_per_item",
     "HOST_PARITY_ATOL",

@@ -13,6 +13,12 @@ Examples::
     python -m repro.sweeps --scenario synthetic --override n_users=50 \\
         --override n_users=100 --algos egp,agp,sck,opt --seeds 0:10
 
+    # realized QoS through the full serving engine: EDF vs FCFS over a
+    # (switching_cost × stickiness) grid of the hysteresis placer
+    python -m repro.sweeps --kind serving --scenario flash_crowd \\
+        --seeds 0:8 --override switching_cost=0 --override \\
+        switching_cost=2 --override stickiness=3
+
 Interrupting a stored run and re-invoking the same command resumes it:
 completed chunks are read back from the manifest, not recomputed.
 """
@@ -28,7 +34,7 @@ import numpy as np
 
 from .aggregate import summarize, table
 from .shard import DEFAULT_MEMORY_BUDGET_MB, HOST_PARITY_ATOL, run_sweep
-from .spec import SweepSpec
+from .spec import KINDS, SweepSpec
 
 __all__ = ["main", "parse_seeds", "build_spec"]
 
@@ -88,6 +94,7 @@ def build_spec(args: argparse.Namespace) -> SweepSpec:
         override_grid=tuple(grid),
         force_host=tuple(_split_csv(args.force_host or [])),
         max_iters=args.max_iters,
+        kind=getattr(args, "kind", "sigma"),
     )
 
 
@@ -121,6 +128,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--scenario", action="append", required=True,
                     help="scenario name(s); repeat or comma-separate "
                          "(registered scenarios or 'synthetic')")
+    ap.add_argument("--kind", choices=list(KINDS), default="sigma",
+                    help="sigma: analytic objective (default); serving: "
+                         "realized QoS through the full serving engine "
+                         "(algos become queue policies edf/fcfs, and "
+                         "--override also accepts switching_cost, "
+                         "stickiness, max_batch, ...)")
     ap.add_argument("--seeds", type=parse_seeds, default=(0,),
                     help="'a:b' range or comma list (default: 0)")
     ap.add_argument("--ticks", type=int, default=None,
@@ -138,7 +151,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--out", default=None,
                     help="store directory (default: experiments/sweeps/"
                          "<store-key>, stable across --seeds/--ticks "
-                         "extensions); use --no-store to disable")
+                         "extensions — serving-kind values depend on the "
+                         "horizon, so there --ticks changes get a fresh "
+                         "store); use --no-store to disable")
     ap.add_argument("--no-store", action="store_true",
                     help="run fully in memory (no resume)")
     ap.add_argument("--chunk-size", type=int, default=None)
@@ -156,7 +171,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="write the aggregate summary as JSON")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
-    args.algos = args.algos or ["egp"]
+    if args.algos is None:
+        # serving kind sweeps queue policies, not placement algorithms
+        args.algos = ["edf", "fcfs"] if args.kind == "serving" else ["egp"]
+    if args.kind == "serving" and args.validate:
+        ap.error("--validate compares the batched accelerator path against "
+                 "the NumPy host path; kind='serving' has neither")
 
     spec = build_spec(args)
     store_dir = None

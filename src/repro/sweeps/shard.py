@@ -213,6 +213,28 @@ def _host_value(inst, algo: str, seed: int, tick: int) -> Tuple[float, float]:
 
 
 # ===========================================================================
+# Serving path (kind="serving": realized QoS through the full engine)
+# ===========================================================================
+
+def _serving_tick_values(scenario: str, overrides, policy: str, seed: int,
+                         n_ticks: int) -> np.ndarray:
+    """Per-tick mean realized QoS of one seed's horizon.
+
+    One call drives the whole placement → routing → continuous-batching
+    pipeline (:func:`repro.serving.horizon.run_horizon`); the scheduler is
+    stateful across ticks, so a seed's horizon is the atomic computation —
+    the *store* stays item-granular per (seed, tick), and a partially
+    stored seed is replayed deterministically on resume (byte-identical,
+    so already-stored ticks are simply skipped, never rewritten).
+    """
+    from repro.serving.horizon import HorizonConfig, run_horizon
+
+    cfg = HorizonConfig.from_overrides(scenario, dict(overrides), policy,
+                                       seed, n_ticks=n_ticks)
+    return run_horizon(cfg).tick_values()
+
+
+# ===========================================================================
 # The engine
 # ===========================================================================
 
@@ -302,7 +324,6 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
     stopped = False
     for (scenario, overrides, algo), items in groups:
         executor = spec.executor_of(algo)
-        envelope = envelope_for(scenario, overrides)
         keys = [it.key() for it in items]
         pending = [(it, k) for it, k in zip(items, keys)
                    if not (store is not None and k in store) and
@@ -311,6 +332,45 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
         if not pending:
             continue
 
+        if executor == "serving":
+            # one seed's horizon = one chunk: ticks share scheduler state,
+            # so they are computed together; pending (seed, tick) items are
+            # still stored individually (resume granularity is unchanged)
+            T = spec.ticks_for(scenario, overrides)
+            by_seed: Dict[int, List[Tuple[WorkItem, str]]] = {}
+            for it, k in pending:
+                by_seed.setdefault(it.seed, []).append((it, k))
+            for seed, chunk in by_seed.items():
+                if max_chunks is not None and computed >= max_chunks:
+                    stopped = True
+                    break
+                t0 = time.perf_counter()
+                tick_vals = _serving_tick_values(scenario, overrides, algo,
+                                                 seed, T)
+                wall = time.perf_counter() - t0
+                chunk_keys = [k for _, k in chunk]
+                vals = tick_vals[[it.tick for it, _ in chunk]]
+                times = np.full(len(chunk), wall / len(chunk))
+                paths.add("serving")
+                meta = {"scenario": scenario, "overrides": dict(overrides),
+                        "algo": algo, "executor": executor,
+                        "path": "serving", "seed": int(seed),
+                        "n_devices": 1, "wall_s": round(wall, 6),
+                        "B": len(chunk)}
+                if store is not None:
+                    store.add_chunk(chunk_keys, vals, times, meta)
+                for k, v, dt in zip(chunk_keys, vals, times):
+                    memory[k] = (float(v), float(dt))
+                computed += 1
+                if verbose:
+                    print(f"[sweeps] {variant_key(scenario, overrides)}/"
+                          f"{algo} seed {seed}: {len(chunk):4d} items via "
+                          f"serving ({wall:.3f}s)", flush=True)
+            if stopped:
+                break
+            continue
+
+        envelope = envelope_for(scenario, overrides)
         group_dev = n_devices if executor == "accel" else 1
         cs = chunk_size or auto_chunk_size(envelope, group_dev,
                                            memory_budget_mb, len(pending))
@@ -378,6 +438,7 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
         "n_devices": n_devices,
         "path": ("shard_map" if "shard_map" in paths else
                  "vmap" if "vmap" in paths else
+                 "serving" if "serving" in paths else
                  "host" if "host" in paths else "cached"),
         "paths": sorted(paths),
         "chunks_computed": computed,

@@ -40,6 +40,8 @@ __all__ = [
     "SCHEMA_VERSION",
     "ACCEL_ALGOS",
     "HOST_ALGOS",
+    "SERVING_POLICIES",
+    "KINDS",
     "SYNTHETIC",
     "WorkItem",
     "SweepSpec",
@@ -56,6 +58,15 @@ ACCEL_ALGOS = ("egp", "agp")
 
 #: Host-only algorithms (NumPy reference implementations in repro.core).
 HOST_ALGOS = ("egp", "agp", "agp_literal", "opt", "sck", "rnd")
+
+#: The ``algos`` axis of a serving-kind sweep: continuous-batching queue
+#: policies of :mod:`repro.serving.scheduler`.
+SERVING_POLICIES = ("edf", "fcfs")
+
+#: Sweep kinds: ``"sigma"`` scores placements with the analytic objective
+#: σ; ``"serving"`` drives scenario traffic through the full serving
+#: engine (:mod:`repro.serving.horizon`) and scores *realized* QoS.
+KINDS = ("sigma", "serving")
 
 #: The pseudo-scenario name backed by ``synthetic_instance`` (§VI-B setup).
 SYNTHETIC = "synthetic"
@@ -92,19 +103,23 @@ def variant_key(scenario: str,
 
 @dataclasses.dataclass(frozen=True)
 class WorkItem:
-    """One evaluation: σ(algo placement) on instance(scenario, seed, tick).
+    """One evaluation: σ(algo placement) on instance(scenario, seed, tick),
+    or one serving-horizon tick for ``executor == "serving"``.
 
     ``max_iters`` is the accelerator greedy-loop cap (0 for host items,
     whose reference implementations always run to completion).
+    ``horizon`` is the total tick count of a serving item's horizon run
+    (0 for sigma items, whose per-tick values are horizon-independent).
     """
 
     scenario: str
     overrides: Tuple[Tuple[str, Any], ...]
     algo: str
-    executor: str          # "accel" | "host"
+    executor: str          # "accel" | "host" | "serving"
     seed: int
     tick: int
     max_iters: int = 0
+    horizon: int = 0
 
     def key(self) -> str:
         """Stable content hash — the resume/store key.
@@ -114,11 +129,19 @@ class WorkItem:
         ``n_ticks``, chunk boundaries, or the device count), so extending
         a sweep or re-sharding it reuses results, while a store written
         under a different ``max_iters`` is never silently reused.
+
+        Exception that proves the rule: a *serving* item's tick value IS a
+        function of the whole horizon length (earlier-tick backlog is
+        re-ordered by later arrivals under EDF), so serving keys append
+        ``horizon`` — extending ``--ticks`` recomputes rather than mixing
+        values from different horizons. Sigma payloads are unchanged, so
+        pre-existing sigma stores stay valid.
         """
         payload = json.dumps(
             [SCHEMA_VERSION, self.scenario, list(map(list, self.overrides)),
              self.algo, self.executor, self.seed, self.tick,
-             self.max_iters],
+             self.max_iters]
+            + ([self.horizon] if self.executor == "serving" else []),
             separators=(",", ":"))
         return hashlib.sha256(payload.encode()).hexdigest()[:24]
 
@@ -145,6 +168,10 @@ class SweepSpec:
     force_host: Tuple[str, ...] = ()
     #: accelerator greedy-loop iteration cap (part of every accel item key)
     max_iters: int = 512
+    #: "sigma" (analytic σ objective) or "serving" (realized QoS through
+    #: the full serving engine; ``algos`` are then queue policies and
+    #: ``override_grid`` may carry serving knobs like ``switching_cost``)
+    kind: str = "sigma"
 
     def __post_init__(self):
         # order-preserving dedup on every axis: duplicates would collapse
@@ -158,17 +185,44 @@ class SweepSpec:
         self.override_grid = tuple(dict.fromkeys(
             _canon_overrides(ov) for ov in (self.override_grid or ((),))))
         self.max_iters = int(self.max_iters)
-        for algo in self.algos:
-            if algo not in set(ACCEL_ALGOS) | set(HOST_ALGOS):
+        self.kind = str(self.kind)
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown sweep kind {self.kind!r}; "
+                             f"have {KINDS}")
+        if self.kind == "serving":
+            if SYNTHETIC in self.scenarios:
                 raise ValueError(
-                    f"unknown algorithm {algo!r}; accelerator algos: "
-                    f"{ACCEL_ALGOS}, host algos: {HOST_ALGOS}")
+                    "kind='serving' needs a registered scenario (an arrival "
+                    "process drives the engine); 'synthetic' has none")
+            for algo in self.algos:
+                if algo not in SERVING_POLICIES:
+                    raise ValueError(
+                        f"kind='serving' sweeps queue policies "
+                        f"{SERVING_POLICIES}, got algo {algo!r}")
+        else:
+            for algo in self.algos:
+                if algo not in set(ACCEL_ALGOS) | set(HOST_ALGOS):
+                    raise ValueError(
+                        f"unknown algorithm {algo!r}; accelerator algos: "
+                        f"{ACCEL_ALGOS}, host algos: {HOST_ALGOS}")
 
     # ------------------------------------------------------------------
     def executor_of(self, algo: str) -> str:
+        if self.kind == "serving":
+            return "serving"
         if algo in ACCEL_ALGOS and algo not in self.force_host:
             return "accel"
         return "host"
+
+    def scenario_overrides(self, overrides: Tuple[Tuple[str, Any], ...]
+                           ) -> Dict[str, Any]:
+        """Overrides that apply to the *scenario* (serving-kind grids may
+        also carry serving-engine knobs — see repro.serving.horizon)."""
+        if self.kind != "serving":
+            return dict(overrides)
+        from repro.serving.horizon import split_serving_overrides
+        scen, _ = split_serving_overrides(overrides)
+        return scen
 
     def ticks_for(self, scenario: str,
                   overrides: Tuple[Tuple[str, Any], ...] = ()) -> int:
@@ -177,7 +231,8 @@ class SweepSpec:
         if scenario == SYNTHETIC:
             return 1
         from repro.workloads import get_scenario
-        return int(get_scenario(scenario, **dict(overrides)).n_ticks)
+        return int(get_scenario(
+            scenario, **self.scenario_overrides(overrides)).n_ticks)
 
     def expand(self) -> List[WorkItem]:
         """The full, stably-ordered work list (the resume unit is one item)."""
@@ -188,10 +243,11 @@ class SweepSpec:
                 for algo in self.algos:
                     ex = self.executor_of(algo)
                     mi = self.max_iters if ex == "accel" else 0
+                    hz = T if ex == "serving" else 0
                     for seed in self.seeds:
                         for tick in range(T):
                             items.append(WorkItem(scenario, overrides, algo,
-                                                  ex, seed, tick, mi))
+                                                  ex, seed, tick, mi, hz))
         return items
 
     def groups(self) -> "List[Tuple[Tuple[str, Tuple, str], List[WorkItem]]]":
@@ -209,7 +265,9 @@ class SweepSpec:
             [SCHEMA_VERSION, list(self.scenarios), list(self.seeds),
              self.n_ticks, list(self.algos),
              [list(map(list, ov)) for ov in self.override_grid],
-             sorted(self.force_host), self.max_iters],
+             sorted(self.force_host), self.max_iters]
+            # sigma payload unchanged: pre-`kind` fingerprints stay valid
+            + ([self.kind] if self.kind != "sigma" else []),
             separators=(",", ":"))
         return hashlib.sha256(payload.encode()).hexdigest()[:12]
 
@@ -217,16 +275,29 @@ class SweepSpec:
         """Hash over the *reuse-stable* axes only (no seeds, no ticks) —
         the default store-directory name, so extending a sweep to more
         seeds or a longer horizon lands in the same store and resumes
-        item-granularly instead of recomputing from scratch."""
+        item-granularly instead of recomputing from scratch.
+
+        Serving sweeps additionally pin the *resolved* horizon length per
+        grid row: their per-tick values depend on it (see
+        :meth:`WorkItem.key`), so a ``--ticks`` change lands in a fresh
+        store and recomputes — extending ``--seeds`` still reuses, and an
+        explicit ``--ticks`` equal to the scenario default keys the same
+        store as the default."""
+        extra = []
+        if self.kind != "sigma":
+            extra = [self.kind, [self.ticks_for(s, ov)
+                                 for s in self.scenarios
+                                 for ov in self.override_grid]]
         payload = json.dumps(
             [SCHEMA_VERSION, list(self.scenarios), list(self.algos),
              [list(map(list, ov)) for ov in self.override_grid],
-             sorted(self.force_host)],
+             sorted(self.force_host)] + extra,
             separators=(",", ":"))
         return hashlib.sha256(payload.encode()).hexdigest()[:12]
 
     def to_json(self) -> Dict[str, Any]:
         return {
+            "kind": self.kind,
             "scenarios": list(self.scenarios),
             "seeds": list(self.seeds),
             "n_ticks": self.n_ticks,
@@ -287,17 +358,15 @@ def materialize(scenario: str, overrides: Tuple[Tuple[str, Any], ...],
                                    **p) for s, t in pairs]
 
     from repro.workloads import get_scenario
-    from repro.workloads.population import MarkovMobility
 
     sc = get_scenario(scenario, **dict(overrides))
     caches: Dict[int, np.ndarray] = {}
     if sc.mobility_p_move > 0.0:
-        mob = MarkovMobility(sc.n_edges, sc.mobility_p_move)
         max_tick: Dict[int, int] = {}
         for s, t in pairs:
             max_tick[int(s)] = max(max_tick.get(int(s), 0), int(t))
         for s, mt in max_tick.items():
-            caches[s] = mob.trajectory(s, mt + 1, sc.n_user_slots)
+            caches[s] = sc.mobility_trajectory(s, mt + 1)
     return [sc.instance_at(int(s), int(t),
                            mobility_cache=caches.get(int(s)))
             for s, t in pairs]

@@ -154,14 +154,22 @@ class Scenario:
         inst.validate()
         return inst
 
+    def mobility_trajectory(self, seed: int,
+                            n_ticks: int) -> Optional[np.ndarray]:
+        """Precomputed ``instance_at`` mobility cache covering ``n_ticks``
+        (None for static-coverage scenarios) — the shared helper that keeps
+        horizon generation O(T·U) for every horizon consumer (``horizon``,
+        sweep materialization, the serving driver)."""
+        if self.mobility_p_move <= 0.0:
+            return None
+        mob = MarkovMobility(self.n_edges, self.mobility_p_move)
+        return mob.trajectory(seed, int(n_ticks), self.n_user_slots)
+
     def horizon(self, seed: int,
                 n_ticks: Optional[int] = None) -> List[PIESInstance]:
         """The full per-tick instance sequence for one seed."""
         T = int(n_ticks or self.n_ticks)
-        cache = None
-        if self.mobility_p_move > 0.0:
-            mob = MarkovMobility(self.n_edges, self.mobility_p_move)
-            cache = mob.trajectory(seed, T, self.n_user_slots)
+        cache = self.mobility_trajectory(seed, T)
         return [self.instance_at(seed, t, mobility_cache=cache)
                 for t in range(T)]
 

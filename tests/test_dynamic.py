@@ -53,6 +53,25 @@ def test_dynamic_placer_reduces_churn():
     assert hyst_loads - int(egp_np(first, qos_matrix_np(first)).sum()) <= naive_loads + 5
 
 
+def test_egp_with_bias_is_egp_when_unbiased():
+    """Parity guard for the hysteresis path: with no residents and zero
+    bonus, the biased greedy must reproduce egp_np placement-for-placement
+    on a battery of random instances (sizes, seeds, edge counts)."""
+    from repro.core.dynamic import _egp_with_bias
+
+    cases = [(40, 2, 10, 3), (80, 4, 25, 4), (100, 10, 100, 10),
+             (12, 2, 4, 3), (64, 6, 24, 4)]
+    for seed, (n_users, n_edges, n_services, max_impls) in enumerate(
+            cases * 2):
+        inst = synthetic_instance(n_users, n_edges=n_edges,
+                                  n_services=n_services,
+                                  max_impls=max_impls, seed=seed)
+        Q = qos_matrix_np(inst)
+        resident = np.zeros((inst.E, inst.P), dtype=bool)
+        np.testing.assert_array_equal(
+            _egp_with_bias(inst, Q, resident, 0.0), egp_np(inst, Q))
+
+
 def test_zero_switching_cost_recovers_per_tick_quality():
     insts = _horizon(n_ticks=3, seed=7)
     placer = DynamicPlacer(switching_cost=0.0, stickiness=0.0)

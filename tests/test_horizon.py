@@ -1,0 +1,211 @@
+"""repro.serving.horizon — scenario traffic through the full serving
+engine: conservation, determinism, EDF vs FCFS, and the kind="serving"
+sweep executor (resumable store, aggregate, CLI)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving.horizon import (HorizonConfig, run_horizon,
+                                   split_serving_overrides)
+from repro.sweeps import SweepSpec, run_sweep, summarize
+
+#: Shrunk scenario so a horizon run costs milliseconds, sized to congest
+#: the executors (small batches, long prompts) so queueing actually
+#: happens and the EDF/FCFS policies can differ.
+SMALL = {"n_user_slots": 32, "n_services": 8, "max_impls": 3, "n_edges": 4}
+LOAD = dict(prompt_tokens=768, new_tokens=64, max_batch=4)
+
+
+def _cfg(**kw):
+    base = dict(scenario="flash_crowd", overrides=tuple(SMALL.items()),
+                policy="edf", seed=0, n_ticks=3, **LOAD)
+    base.update(kw)
+    return HorizonConfig(**base)
+
+
+# ===========================================================================
+# The driver
+# ===========================================================================
+
+def test_horizon_conservation_and_ranges():
+    """served + dropped == submitted, latencies ≥ 0, QoS within [0, 1]."""
+    for scenario in ("steady", "flash_crowd"):
+        res = run_horizon(_cfg(scenario=scenario, seed=1))
+        assert len(res.per_tick) == 3
+        for t in res.per_tick:
+            assert t.served + t.dropped == t.submitted
+            assert 0.0 <= t.mean_realized_qos <= 1.0
+            assert t.queue_depth >= 0 and t.in_flight >= 0
+        assert res.served + res.dropped == res.submitted
+        assert res.served == len(res.requests)
+        # every submitted request finished (drained) with sane timing
+        for r in res.requests:
+            assert r.finish >= r.start >= r.arrival >= 0.0
+        assert 0.0 <= res.mean_realized_qos <= 1.0
+
+
+def test_horizon_state_survives_tick_boundaries():
+    """Under congestion, backlog must spill across ticks (the stateful
+    scheduler is the point of the horizon driver)."""
+    res = run_horizon(_cfg(seed=2, max_batch=2))
+    assert any(t.queue_depth > 0 or t.in_flight > 0 for t in res.per_tick)
+    # spilled requests finish after their arrival tick's boundary
+    assert any(r.finish > (int(r.arrival) + 1) for r in res.requests)
+
+
+def test_horizon_deterministic_byte_identical():
+    a = run_horizon(_cfg(seed=3))
+    b = run_horizon(_cfg(seed=3))
+    fa = np.array([r.finish for r in a.requests])
+    fb = np.array([r.finish for r in b.requests])
+    assert fa.tobytes() == fb.tobytes()
+    assert a.tick_values().tobytes() == b.tick_values().tobytes()
+
+
+def test_edf_never_worse_than_fcfs_on_mean_misses():
+    """QoS-aware admission: across seeds, EDF's mean deadline misses must
+    not exceed FCFS's (the paper's QoS-first ordering argument)."""
+    edf, fcfs = [], []
+    for seed in range(4):
+        edf.append(run_horizon(_cfg(seed=seed)).deadline_misses)
+        fcfs.append(run_horizon(
+            _cfg(seed=seed, policy="fcfs")).deadline_misses)
+    assert np.mean(edf) <= np.mean(fcfs) + 1e-9
+
+
+def test_placer_knobs_flow_through():
+    """stickiness=0/switching_cost=0 re-places freely (more loads) vs the
+    hysteresis config; both emit per-tick load counts."""
+    free = run_horizon(_cfg(switching_cost=0.0, stickiness=0.0))
+    sticky = run_horizon(_cfg(switching_cost=2.0, stickiness=5.0))
+    assert free.per_tick[0].model_loads > 0
+    assert sum(t.model_loads for t in sticky.per_tick[1:]) <= \
+        sum(t.model_loads for t in free.per_tick[1:]) + 2
+
+
+def test_switching_cost_is_realized_as_load_latency():
+    """switching_cost must move the *measured* numbers, not just the
+    bookkeeping value: same placements (same stickiness), but costly
+    switches gate new implementations behind a load window, so requests
+    queue through cold starts and realized QoS drops."""
+    cheap = run_horizon(_cfg(switching_cost=0.0, stickiness=3.0))
+    costly = run_horizon(_cfg(switching_cost=0.5, stickiness=3.0))
+    # identical placements and routing → identical load counts...
+    assert [t.model_loads for t in cheap.per_tick] == \
+        [t.model_loads for t in costly.per_tick]
+    # ...but the realized numbers must differ (tick 0 loads everything)
+    assert costly.per_tick[0].mean_realized_qos < \
+        cheap.per_tick[0].mean_realized_qos
+    assert costly.mean_realized_qos < cheap.mean_realized_qos
+
+
+def test_split_serving_overrides_and_config():
+    scen, serving = split_serving_overrides(
+        {"n_user_slots": 16, "switching_cost": 1.5, "max_batch": 2})
+    assert scen == {"n_user_slots": 16}
+    assert serving == {"switching_cost": 1.5, "max_batch": 2}
+    cfg = HorizonConfig.from_overrides(
+        "steady", {"n_user_slots": 16, "switching_cost": 1.5}, "fcfs",
+        seed=4, n_ticks=2)
+    assert cfg.overrides == (("n_user_slots", 16),)
+    assert cfg.switching_cost == 1.5 and cfg.policy == "fcfs"
+
+
+# ===========================================================================
+# kind="serving" sweeps
+# ===========================================================================
+
+SERVING_GRID = dict(
+    kind="serving", scenarios=("steady", "flash_crowd"), seeds=(0, 1),
+    n_ticks=2, algos=("edf", "fcfs"),
+    override_grid=(tuple(SMALL.items()) + (("switching_cost", 0.0),
+                                           ("stickiness", 0.0)),
+                   tuple(SMALL.items()) + (("switching_cost", 2.0),
+                                           ("stickiness", 3.0))))
+
+
+def test_spec_serving_kind_validation():
+    spec = SweepSpec(**SERVING_GRID)
+    assert spec.executor_of("edf") == "serving"
+    assert len(spec.expand()) == 2 * 2 * 2 * 2 * 2
+    assert all(i.executor == "serving" for i in spec.expand())
+    with pytest.raises(ValueError):
+        SweepSpec(kind="serving", scenarios=("synthetic",), algos=("edf",))
+    with pytest.raises(ValueError):
+        SweepSpec(kind="serving", algos=("egp",))
+    with pytest.raises(ValueError):
+        SweepSpec(kind="quantum")
+    # serving items hash apart from sigma items of the same coordinates
+    sigma = SweepSpec(scenarios=("steady",), seeds=(0,), n_ticks=1)
+    serving = SweepSpec(kind="serving", scenarios=("steady",), seeds=(0,),
+                        n_ticks=1, algos=("edf",))
+    assert sigma.expand()[0].key() != serving.expand()[0].key()
+    assert sigma.store_key() != serving.store_key()
+    # a serving tick value depends on the whole horizon (EDF re-orders
+    # earlier backlog by later arrivals), so the item key and the default
+    # store pin the horizon length — unlike sigma, where tick values are
+    # horizon-independent and --ticks extensions resume
+    longer = SweepSpec(kind="serving", scenarios=("steady",), seeds=(0,),
+                       n_ticks=2, algos=("edf",))
+    assert serving.expand()[0].key() != longer.expand()[0].key()
+    assert serving.store_key() != longer.store_key()
+    sigma2 = SweepSpec(scenarios=("steady",), seeds=(0,), n_ticks=2)
+    assert sigma.expand()[0].key() == sigma2.expand()[0].key()
+    # an explicit --ticks equal to the scenario default (steady: 8) is the
+    # same computation — same item keys, same store
+    default_t = SweepSpec(kind="serving", scenarios=("steady",),
+                          algos=("edf",))
+    explicit_t = SweepSpec(kind="serving", scenarios=("steady",),
+                           n_ticks=8, algos=("edf",))
+    assert default_t.store_key() == explicit_t.store_key()
+    assert default_t.expand()[0].key() == explicit_t.expand()[0].key()
+
+
+def test_serving_sweep_end_to_end_resume_and_aggregate(tmp_path):
+    spec = SweepSpec(**SERVING_GRID)
+    d = tmp_path / "store"
+    # "kill" after 3 of 16 seed-chunks, then resume
+    partial = run_sweep(spec, store_dir=d, max_chunks=3)
+    assert partial.execution["chunks_computed"] == 3
+    assert not partial.complete
+    before = (d / "manifest.jsonl").read_text().splitlines()
+    done = run_sweep(spec, store_dir=d)
+    assert done.complete and done.execution["path"] == "serving"
+    assert done.execution["items_skipped"] == 3 * 2  # 2 ticks per chunk
+    # completed chunks were never rewritten
+    after = (d / "manifest.jsonl").read_text().splitlines()
+    assert after[:3] == before
+    # resumed values equal an unstored fresh run bitwise (determinism)
+    fresh = run_sweep(spec)
+    for k in done.values:
+        np.testing.assert_array_equal(done.values[k], fresh.values[k])
+    # realized QoS is a probability-like score, and the aggregate is full
+    summary = summarize(done)
+    for cell in summary["cells"].values():
+        assert cell["sigma"]["n"] == 4  # 2 seeds × 2 ticks
+        assert 0.0 <= cell["sigma"]["mean"] <= 1.0
+    # re-run is a no-op
+    again = run_sweep(spec, store_dir=d)
+    assert again.execution["chunks_computed"] == 0
+
+
+def test_serving_cli_smoke(tmp_path, capsys):
+    from repro.sweeps.cli import main
+    small = [a for k, v in SMALL.items()
+             for a in ("--override", f"{k}={v}")]
+    rc = main(["--kind", "serving", "--scenario", "flash_crowd",
+               "--seeds", "0:2", "--ticks", "2",
+               "--out", str(tmp_path / "store"),
+               "--json", str(tmp_path / "summary.json"), "-q"] + small)
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "flash_crowd" in out and "edf" in out and "fcfs" in out
+    summary = json.loads((tmp_path / "summary.json").read_text())
+    assert summary["spec"]["kind"] == "serving"
+    assert len(summary["cells"]) == 2  # default algos: edf + fcfs
+    # --validate has no host path to compare against for serving sweeps
+    with pytest.raises(SystemExit):
+        main(["--kind", "serving", "--scenario", "steady", "--no-store",
+              "--validate", "-q"])
+    capsys.readouterr()

@@ -1,9 +1,16 @@
 """Continuous-batching scheduler: EDF vs FCFS, slot reuse, determinism."""
 import numpy as np
+import pytest
 
 from repro.serving import Router, default_catalog
 from repro.serving.scheduler import (ArrivingRequest, ContinuousScheduler,
                                      ExecutorProfile, simulate)
+
+
+def _req(uid, prompt, arrival=0.0, delta=10.0, new_tokens=0):
+    return ArrivingRequest(uid=uid, impl=0, edge=0, arrival=arrival,
+                           prompt_tokens=prompt, new_tokens=new_tokens,
+                           alpha=0.0, delta=delta, accuracy=0.9)
 
 
 def _routed_instance(n_users=120, seed=0):
@@ -55,3 +62,106 @@ def test_simulation_deterministic():
     a = simulate(inst, assignment, comp, seed=7)
     b = simulate(inst, assignment, comp, seed=7)
     assert a == b
+
+
+# ===========================================================================
+# Regression: event-heap correctness (the two pre-rewrite bugs)
+# ===========================================================================
+
+def test_regression_slot_frees_at_true_completion_time():
+    """Freeing a batch slot must admit queued work at the *earliest*
+    completion time. The pre-rewrite executor filtered its running heap
+    with a plain list comprehension, silently breaking the heap invariant:
+    with in-flight finishes [3.0, 2.0] left after the filter, the root
+    (3.0) masked the true next completion (2.0), so the queued request
+    started a full second late and its latency was corrupted."""
+    prof = ExecutorProfile(prefill_per_token_s=1e-3, decode_per_step_s=0.0,
+                           max_batch=3)
+    # all arrive at t=0, fcfs order = uid order; occupancy factor 1+0.15·occ
+    r0 = _req(0, 1000)   # occ 0 → dur 1.0,     finish 1.0
+    r1 = _req(1, 2609)   # occ 1 → dur 3.00035, finish 3.00035
+    r2 = _req(2, 1539)   # occ 2 → dur 2.0007,  finish 2.0007
+    r3 = _req(3, 1600)   # queued; admitted at 1.0 (occ 2) → finish 3.08
+    r4 = _req(4, 100)    # queued; must start when r2's slot frees (2.0007)
+    reqs = [r0, r1, r2, r3, r4]
+    ContinuousScheduler({(0, 0): prof}, policy="fcfs").run(reqs)
+    assert r0.finish == pytest.approx(1.0)
+    assert r3.start == pytest.approx(1.0)
+    assert r3.finish == pytest.approx(1.0 + 1.6 * 1.3)
+    # the regression: pre-fix r4 started at r1's finish (3.00035, and at
+    # occupancy 1) instead of r2's (2.0007, occupancy 2)
+    assert r4.start == pytest.approx(r2.finish)
+    assert r4.finish == pytest.approx(r2.finish + 0.1 * 1.3)
+
+
+def test_regression_equal_finish_times_do_not_crash():
+    """Two equal finish times must not compare request objects. The
+    pre-rewrite running heap pushed bare ``(finish, request)`` tuples;
+    ``ArrivingRequest`` is unordered, so a tie raised TypeError."""
+    prof = ExecutorProfile(prefill_per_token_s=1e-3, decode_per_step_s=0.0,
+                           max_batch=64)
+    # engineered bit-exact tie: (23·1e-3)·1.0 == (20·1e-3)·1.15 == 0.023
+    pair = [_req(0, 23), _req(1, 20)]
+    ContinuousScheduler({(0, 0): prof}, policy="fcfs").run(pair)
+    assert pair[0].finish == pair[1].finish == 0.023
+    # tie-heavy stress: 25 scaled tie pairs in one rolling batch, plus a
+    # burst of zero-length requests (all finish at their admission instant)
+    for policy in ("edf", "fcfs"):
+        bulk = [r for m in range(1, 26)
+                for r in (_req(2 * m, 23 * m), _req(2 * m + 1, 20 * m))]
+        bulk += [_req(100 + u, 0, arrival=float(u % 3)) for u in range(50)]
+        sched = ContinuousScheduler({(0, 0): prof}, policy=policy)
+        sched.run(bulk)
+        assert all(r.finish >= r.arrival for r in bulk)
+        assert bulk[0].finish == bulk[1].finish == 0.023
+
+
+def test_stateful_run_until_matches_one_shot_drain():
+    """Tick-incremental operation (submit per tick + run_until) must be
+    byte-identical to one-shot batch execution, with backlog visible at
+    the tick boundary."""
+    prof = ExecutorProfile(prefill_per_token_s=1e-3, decode_per_step_s=0.0,
+                           max_batch=2)
+    def mk():
+        return [_req(u, 400, arrival=0.25 * u) for u in range(12)]
+
+    one = mk()
+    ContinuousScheduler({(0, 0): prof}, policy="edf").run(one)
+
+    two = mk()
+    sched = ContinuousScheduler({(0, 0): prof}, policy="edf")
+    sched.submit(two[:6])           # tick 0: arrivals in [0, 1.5)
+    sched.run_until(1.5)
+    assert sched.in_flight() > 0    # batches survive the tick boundary
+    assert sched.backlog() == 6 - len(sched.completed)
+    sched.submit(two[6:])           # tick 1
+    sched.run_until(3.0)
+    sched.drain()
+    f1 = np.array([r.finish for r in one])
+    f2 = np.array([r.finish for r in two])
+    assert f1.tobytes() == f2.tobytes()
+    assert sched.backlog() == 0 and len(sched.completed) == 12
+
+
+def test_delay_executor_gates_admission_until_load_completes():
+    """A model-load gate must hold queued work (even work arriving inside
+    the window) and release it the instant the load finishes."""
+    prof = ExecutorProfile(prefill_per_token_s=1e-3, decode_per_step_s=0.0,
+                           max_batch=2)
+    sched = ContinuousScheduler({(0, 0): prof}, policy="fcfs")
+    sched.delay_executor((0, 0), 2.0)
+    r = _req(0, 100, arrival=1.0)
+    sched.submit([r])
+    sched.run_until(1.5)
+    assert sched.in_flight() == 0 and sched.queue_depth() == 1
+    sched.drain()
+    assert r.start == pytest.approx(2.0)
+    assert r.finish == pytest.approx(2.1)
+
+
+def test_unknown_executor_and_policy_are_rejected():
+    with pytest.raises(ValueError):
+        ContinuousScheduler(policy="sjf")
+    sched = ContinuousScheduler(policy="edf")
+    with pytest.raises(KeyError):
+        sched.submit([_req(0, 10)])
