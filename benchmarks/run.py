@@ -109,6 +109,19 @@ def main() -> None:
          f";steady_qos_edf={steady['mean_realized_qos']:.4f}"
          f";dropped={edf['dropped']}")
 
+    from benchmarks import tuning
+    t0 = time.perf_counter()
+    tn = tuning.run(seeds=(0,) if not args.full else (0, 1),
+                    n_ticks=2 if not args.full else 4, verbose=False)
+    dt = (time.perf_counter() - t0) * 1e6 / tn["n_items"]
+    flash = tn["table"]["flash_crowd"]
+    emit("tuning_fit", dt,
+         f"flash_sw={flash['switching_cost']:g}"
+         f";flash_stick={flash['stickiness']:g}"
+         f";flash_qos={flash['mean_qos']:.4f}"
+         f";frontier={tn['frontier_sizes']['flash_crowd']}"
+         f";fit_us={tn['fit_s'] * 1e6:.0f}")
+
     sc = scenarios.run(seeds=(0, 1) if not args.full else (0, 1, 2, 3),
                        n_ticks=4 if not args.full else 8, verbose=False)
     # us_per_call is the engine's chunked accelerator evaluation (incl.

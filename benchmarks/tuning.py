@@ -1,0 +1,64 @@
+"""Auto-tuner benchmark — sweep store → fitted table → Pareto frontier.
+
+Runs a small ``kind="serving"`` sweep into a throwaway store, fits the
+per-scenario ``(switching_cost, stickiness)`` lookup table from it
+(:mod:`repro.tuning.fit`), extracts the (QoS, miss-rate) /
+(accuracy, latency) Pareto frontiers (:mod:`repro.tuning.pareto`), and
+reports the fitted knobs plus frontier sizes — the ``tuning_fit`` row of
+``benchmarks/run.py``.
+
+    PYTHONPATH=src python -m benchmarks.tuning
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, Sequence
+
+from repro.sweeps import SweepSpec, run_sweep
+from repro.tuning import fit_table, frontier_points
+
+#: Congested-but-fast load point (see tests/test_horizon.py::LOAD).
+SMALL = {"n_user_slots": 32, "n_services": 8, "max_impls": 3, "n_edges": 4,
+         "prompt_tokens": 768, "new_tokens": 64, "max_batch": 4}
+KNOB_GRID = ((0.0, 0.0), (0.0, 3.0), (2.0, 0.0), (2.0, 3.0))
+
+
+def run(scenarios: Sequence[str] = ("steady", "flash_crowd"),
+        seeds: Sequence[int] = (0, 1), n_ticks: int = 3,
+        verbose: bool = True) -> Dict:
+    grid = tuple(
+        tuple(sorted({**SMALL, "switching_cost": sc,
+                      "stickiness": st}.items()))
+        for sc, st in KNOB_GRID)
+    spec = SweepSpec(kind="serving", scenarios=tuple(scenarios),
+                     seeds=tuple(seeds), n_ticks=n_ticks,
+                     algos=("edf", "fcfs"), override_grid=grid)
+    out: Dict = {"n_items": len(spec.expand())}
+    with tempfile.TemporaryDirectory(prefix="tuning_bench_") as tmp:
+        store = Path(tmp) / "store"
+        t0 = time.perf_counter()
+        run_sweep(spec, store_dir=store)
+        out["sweep_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        table = fit_table(store)
+        out["fit_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        frontiers = frontier_points(store)
+        out["pareto_s"] = time.perf_counter() - t0
+    out["table"] = table["scenarios"]
+    out["frontier_sizes"] = {
+        s: sum(p.qos_frontier for p in pts) for s, pts in frontiers.items()}
+    if verbose:
+        for name, row in sorted(out["table"].items()):
+            print(f"[tuning] {name:<14} -> switching_cost="
+                  f"{row['switching_cost']:g} stickiness="
+                  f"{row['stickiness']:g} (qos {row['mean_qos']:.4f} "
+                  f"±{row['ci95']:.4f}); "
+                  f"{out['frontier_sizes'][name]} frontier point(s)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

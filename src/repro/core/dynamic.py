@@ -87,15 +87,25 @@ class DynamicPlacer:
         #: (the serving horizon's cold-start gating) read this instead of
         #: shadowing the resident-set bookkeeping.
         self.new_loads: Optional[np.ndarray] = None
+        #: [E, P] bool — implementations the latest step() *evicted* (were
+        #: resident, no longer placed); the serving horizon re-routes work
+        #: still queued on these instead of executing it on an evicted model.
+        self.evicted: Optional[np.ndarray] = None
 
     def step(self, inst: PIESInstance, Q: Optional[np.ndarray] = None):
-        """One control tick: returns (x, value, n_loads)."""
+        """One control tick: returns (x, value, n_loads).
+
+        ``self.stickiness`` is read afresh every step, so a feedback
+        controller (:class:`repro.tuning.controller.FeedbackPlacer`) can
+        adapt the hysteresis online between ticks.
+        """
         if Q is None:
             Q = qos_matrix_np(inst)
         if self._resident is None:
             self._resident = np.zeros((inst.E, inst.P), dtype=bool)
         x = _egp_with_bias(inst, Q, self._resident, self.stickiness)
         self.new_loads = x & ~self._resident
+        self.evicted = self._resident & ~x
         loads = int(self.new_loads.sum())
         value = sigma_np(inst, x, Q) - self.switching_cost * loads
         self._resident = x

@@ -25,12 +25,23 @@ per control tick, :func:`run_horizon`
    spills into the next tick, exactly like a real engine).
 
 Each tick emits a :class:`TickReport` (realized QoS, deadline misses,
-queue depth, in-flight count, model loads); requests are *attributed to
-their arrival tick* even when they finish later, and dropped requests
-(OMS returns −1: no placed implementation of the requested service)
-score 0 QoS — so ``per_tick[t].mean_realized_qos`` is an unconditional
-per-tick service-quality number and conservation holds exactly
-(``served + dropped == submitted``).
+queue depth, in-flight count, model loads, requeued backlog); requests
+are *attributed to their arrival tick* even when they finish later, and
+dropped requests (OMS returns −1: no placed implementation of the
+requested service) score 0 QoS — so ``per_tick[t].mean_realized_qos`` is
+an unconditional per-tick service-quality number and conservation holds
+exactly (``served + dropped == submitted``). Backlog queued on an
+implementation that a re-placement *evicts* never executes on the evicted
+model: it is pulled off the executor and re-routed through OMS against
+the new placement (:func:`_requeue_evicted`), or dropped when the new
+placement no longer serves it.
+
+Two closed data paths feed placement from measurement
+(:mod:`repro.tuning`): ``HorizonConfig.from_overrides`` consults the
+fitted per-scenario knob lookup table for unset placer knobs, and
+``policy="feedback"`` swaps the open-loop ``DynamicPlacer`` for the
+:class:`~repro.tuning.controller.FeedbackPlacer`, which adapts the
+stickiness bonus online from each tick's realized completions.
 
 Everything is a pure function of ``(config, seed)``: same seed →
 byte-identical per-request finish times, which is what lets
@@ -45,6 +56,7 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 import numpy as np
 
 from repro.core.dynamic import DynamicPlacer
+from repro.core.instance import PIESInstance
 from repro.core.qos import qos_matrix_np
 from repro.core.scheduling import oms_np
 
@@ -59,7 +71,9 @@ __all__ = ["SERVING_PARAM_KEYS", "HorizonConfig", "TickReport",
 #: mapping through :func:`split_serving_overrides` so one ``--override``
 #: grammar covers both layers.
 SERVING_PARAM_KEYS = ("switching_cost", "stickiness", "tick_duration",
-                      "prompt_tokens", "new_tokens", "max_batch")
+                      "prompt_tokens", "new_tokens", "max_batch",
+                      "feedback_gain", "feedback_ewma",
+                      "feedback_target_miss")
 
 
 def split_serving_overrides(
@@ -78,7 +92,11 @@ class HorizonConfig:
 
     scenario: str = "steady"
     overrides: Tuple[Tuple[str, Any], ...] = ()   # scenario-level overrides
-    policy: str = "edf"             # continuous-batching queue policy
+    #: ``"edf"`` / ``"fcfs"`` — continuous-batching queue policy — or
+    #: ``"feedback"``: EDF queueing with the closed-loop
+    #: :class:`~repro.tuning.controller.FeedbackPlacer` adapting the
+    #: stickiness bonus online from realized per-tick QoS/miss-rate.
+    policy: str = "edf"
     #: DynamicPlacer's QoS-units switching cost — and, *realized*, the
     #: model-load latency in seconds: a newly placed implementation cannot
     #: serve until ``switching_cost`` seconds into its tick (arrivals
@@ -93,13 +111,33 @@ class HorizonConfig:
     prompt_tokens: int = 128
     new_tokens: int = 32
     max_batch: int = 8
+    # policy="feedback" controller knobs (see repro.tuning.controller)
+    feedback_gain: float = 1.5
+    feedback_ewma: float = 0.5
+    feedback_target_miss: float = 0.05
 
     @classmethod
     def from_overrides(cls, scenario: str, overrides, policy: str,
                        seed: int, n_ticks: Optional[int] = None
                        ) -> "HorizonConfig":
-        """Build a config from a flat sweep-style override mapping."""
+        """Build a config from a flat sweep-style override mapping.
+
+        Placer knobs the mapping leaves unset are looked up in the fitted
+        per-scenario table (:func:`repro.tuning.fit.recommend`) when one
+        ships for this scenario — the auto-tuner's closed data path from
+        sweep grids back into the serving engine. Explicit overrides
+        always win, and direct ``HorizonConfig(...)`` construction keeps
+        the plain dataclass defaults.
+        """
         scen_ov, serving = split_serving_overrides(overrides)
+        missing = [k for k in ("switching_cost", "stickiness")
+                   if k not in serving]
+        if missing:
+            from repro.tuning.fit import recommend  # deferred: no cycle
+            rec = recommend(scenario)
+            if rec:
+                for k in missing:
+                    serving[k] = rec[k]
         return cls(scenario=scenario,
                    overrides=tuple(sorted(scen_ov.items())),
                    policy=policy, seed=int(seed), n_ticks=n_ticks,
@@ -121,6 +159,14 @@ class TickReport:
     in_flight: int            # sequences still running at the boundary
     model_loads: int          # newly loaded implementations this tick
     placement_value: float    # DynamicPlacer value (σ − switching·loads)
+    #: backlog requests pulled off implementations this tick's re-placement
+    #: evicted and pushed back through OMS re-routing (they never execute
+    #: on an evicted model; unroutable ones count as dropped at their
+    #: arrival tick)
+    requeued: int = 0
+    #: stickiness bonus the placer applied this tick (config value for
+    #: open-loop policies; the adapted value under policy="feedback")
+    stickiness: float = float("nan")
 
 
 @dataclasses.dataclass
@@ -180,14 +226,84 @@ def _arrival_times(scenario, seed: int, tick: int, n: int,
     return times[:n]
 
 
+def _requeue_evicted(sched: ContinuousScheduler, evicted: np.ndarray,
+                     inst: PIESInstance, x: np.ndarray,
+                     config: HorizonConfig,
+                     tick_reqs: List[List[ArrivingRequest]],
+                     meta: List[Dict[str, Any]]) -> int:
+    """Pull backlog off evicted implementations, re-route it through OMS.
+
+    A re-placement that drops a resident implementation mid-horizon must
+    not leave queued (not in-flight) requests to execute on the evicted
+    model. They are pulled off the executor and pushed through OMS (Alg. 1)
+    against the *new* placement, as a mini-instance whose user set is
+    exactly the displaced requests (their real edge/service/α/δ attributes
+    against the tick's infrastructure and catalog). Re-routed requests keep
+    their true arrival time (latency still counts the wait so far) but
+    cannot be admitted in the past; unroutable ones (−1: the new placement
+    holds no implementation of their service on their edge) are dropped
+    and re-attributed as such to their arrival tick. Returns the number of
+    requests pulled.
+    """
+    pulled: List[ArrivingRequest] = []
+    for e, p in np.argwhere(evicted):
+        pulled.extend(sched.evict_queued((int(e), int(p))))
+    if not pulled:
+        return 0
+    bad = [r.uid for r in pulled if r.service < 0]
+    if bad:
+        # a silently-vanishing request would break conservation; every
+        # horizon-submitted request carries its service, so this only
+        # fires on a foreign driver that must opt into re-routing
+        raise ValueError(f"cannot re-route requests with no service "
+                         f"attribute (uids {bad[:5]}...)")
+    mini = PIESInstance(
+        K=inst.K, W=inst.W, R=inst.R,
+        sm_service=inst.sm_service, sm_acc=inst.sm_acc,
+        sm_k=inst.sm_k, sm_w=inst.sm_w, sm_r=inst.sm_r,
+        u_edge=np.array([r.edge for r in pulled], dtype=inst.u_edge.dtype),
+        u_service=np.array([r.service for r in pulled],
+                           dtype=inst.u_service.dtype),
+        u_alpha=np.array([r.alpha for r in pulled], np.float64),
+        u_delta=np.array([r.delta for r in pulled], np.float64),
+        delta_max=inst.delta_max)
+    y, _ = oms_np(mini, x, qos_matrix_np(mini))
+    for r, p2 in zip(pulled, y):
+        p2 = int(p2)
+        if p2 < 0:
+            t0 = int(r.arrival // config.tick_duration)
+            tick_reqs[t0] = [q for q in tick_reqs[t0] if q.uid != r.uid]
+            meta[t0]["dropped"] += 1
+            sched.unsubmit(r)   # keeps backlog() exact: it never completes
+            continue
+        r.impl = p2
+        r.accuracy = float(inst.sm_acc[p2])
+        key = (r.edge, p2)
+        if key not in sched.executors:
+            sched.add_executor(key, ExecutorProfile.from_comp_cost(
+                float(inst.sm_w[p2]), config.max_batch))
+        sched.requeue([r])
+    return len(pulled)
+
+
 def run_horizon(config: HorizonConfig) -> HorizonResult:
     """Drive one scenario horizon through placement → routing → serving."""
     from repro.workloads import get_scenario  # deferred: workloads uses core
 
     sc = get_scenario(config.scenario, **dict(config.overrides))
     T = int(config.n_ticks or sc.n_ticks)
-    placer = DynamicPlacer(config.switching_cost, config.stickiness)
-    sched = ContinuousScheduler(policy=config.policy)
+    feedback = config.policy == "feedback"
+    if feedback:
+        # deferred import: repro.tuning imports serving modules at top level
+        from repro.tuning.controller import FeedbackPlacer
+        placer = FeedbackPlacer(
+            config.switching_cost, config.stickiness,
+            gain=config.feedback_gain, ewma=config.feedback_ewma,
+            target_miss=config.feedback_target_miss)
+    else:
+        placer = DynamicPlacer(config.switching_cost, config.stickiness)
+    # the feedback policy adapts the *placer*; its queue stays QoS-aware
+    sched = ContinuousScheduler(policy="edf" if feedback else config.policy)
 
     mobility_cache = sc.mobility_trajectory(config.seed, T)
 
@@ -195,10 +311,13 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
     meta: List[Dict[str, Any]] = []
     boundary: List[Tuple[int, int]] = []   # (queue_depth, in_flight) per tick
     uid = 0
+    done_ptr = 0   # completions already fed back to the controller
     for t in range(T):
         inst = sc.instance_at(config.seed, t, mobility_cache=mobility_cache)
         Q = qos_matrix_np(inst)
         x, value, loads = placer.step(inst, Q)
+        applied_stickiness = placer.current_stickiness if feedback \
+            else config.stickiness
         # cold starts: every implementation the placer just loaded spends
         # the first switching_cost seconds of the tick loading and serves
         # nothing until then — gated up front, so an impl placed now but
@@ -210,6 +329,12 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
                 sched.add_executor(key, ExecutorProfile.from_comp_cost(
                     float(inst.sm_w[p]), config.max_batch))
                 sched.delay_executor(key, ready_at)
+        # backlog queued on implementations this re-placement evicted is
+        # re-routed (or dropped) before any of it can start executing
+        n_requeued = 0
+        if placer.evicted is not None and placer.evicted.any():
+            n_requeued = _requeue_evicted(sched, placer.evicted, inst, x,
+                                          config, tick_reqs, meta)
         y, _ = oms_np(inst, x, Q)
 
         times = _arrival_times(sc, config.seed, t, inst.U,
@@ -229,7 +354,8 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
                 prompt_tokens=config.prompt_tokens,
                 new_tokens=config.new_tokens,
                 alpha=float(inst.u_alpha[u]), delta=float(inst.u_delta[u]),
-                accuracy=float(inst.sm_acc[p])))
+                accuracy=float(inst.sm_acc[p]),
+                service=int(inst.u_service[u])))
         uid += inst.U
         sched.submit(reqs)
         sched.run_until((t + 1) * config.tick_duration)
@@ -238,7 +364,25 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
         boundary.append((sched.queue_depth(), sched.in_flight()))
         meta.append({"submitted": inst.U, "dropped": int((y < 0).sum()),
                      "loads": loads, "value": float(value),
-                     "delta_max": float(inst.delta_max)})
+                     "delta_max": float(inst.delta_max),
+                     "requeued": n_requeued,
+                     "stickiness": float(applied_stickiness)})
+
+        if feedback:
+            # close the loop on what actually *completed* this tick — the
+            # only signal a real controller has mid-run
+            window = sched.completed[done_ptr:]
+            done_ptr = len(sched.completed)
+            if window:
+                w_lats = np.maximum(
+                    np.array([r.finish - r.arrival for r in window]), 0.0)
+                w_qos, w_miss = realized_qos_np(
+                    w_lats, np.array([r.delta for r in window]),
+                    np.array([r.accuracy for r in window]),
+                    np.array([r.alpha for r in window]),
+                    float(inst.delta_max))
+                placer.observe(float(w_qos.mean()), float(w_miss.mean()),
+                               len(window))
 
     # Backlog left at the horizon end drains to completion (graceful
     # shutdown); its requests stay attributed to their arrival ticks.
@@ -265,7 +409,8 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
             deadline_misses=int(missed.sum()),
             mean_latency_s=float(lats.mean()) if reqs else float("nan"),
             queue_depth=boundary[t][0], in_flight=boundary[t][1],
-            model_loads=m["loads"], placement_value=m["value"]))
+            model_loads=m["loads"], placement_value=m["value"],
+            requeued=m["requeued"], stickiness=m["stickiness"]))
 
     return HorizonResult(config=config, per_tick=per_tick,
                          requests=[r for reqs in tick_reqs for r in reqs])

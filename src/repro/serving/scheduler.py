@@ -80,6 +80,8 @@ class ArrivingRequest:
     alpha: float
     delta: float              # delay threshold (seconds)
     accuracy: float           # A_sm of the scheduled implementation
+    service: int = -1         # requested service (enables re-routing when
+                              # the scheduled impl is evicted mid-horizon)
 
     # simulation state
     start: float = -1.0
@@ -190,6 +192,45 @@ class ContinuousScheduler:
         ex = self.executors[key]
         ex.available_from = max(ex.available_from, float(until))
         self._push(ex.available_from, _KICK, key, None)
+
+    def evict_queued(self, key: Tuple[int, int]) -> List[ArrivingRequest]:
+        """Pull every *queued* (not in-flight) request off (edge, impl).
+
+        Used when re-placement evicts a resident implementation
+        mid-horizon: queued work must not execute on a model that is no
+        longer placed. Requests are returned in the executor's policy
+        order (deterministic); in-flight batches run to completion.
+        """
+        ex = self.executors.get(key)
+        if ex is None:
+            return []
+        out = []
+        while ex.queue:
+            _, _, r = heapq.heappop(ex.queue)
+            out.append(r)
+        return out
+
+    def unsubmit(self, r: ArrivingRequest) -> None:
+        """Remove one previously submitted request from the conservation
+        accounting — it will neither execute nor complete (the horizon
+        drops evicted backlog OMS cannot re-route). Without this,
+        ``backlog()`` would stay positive forever after a drain."""
+        self.n_submitted -= 1
+
+    def requeue(self, requests: Iterable[ArrivingRequest]) -> None:
+        """Re-submit previously evicted requests to their (new) executors.
+
+        Unlike :meth:`submit`, the arrival event fires no earlier than the
+        current clock (``self.now``): the original arrival time stays on
+        the request (latency is still measured from true arrival), but a
+        request evicted at tick *t* cannot be admitted in the past.
+        """
+        for r in requests:
+            key = (r.edge, r.impl)
+            if key not in self.executors:
+                raise KeyError(f"no executor registered for (edge, impl)="
+                               f"{key}; call add_executor first")
+            self._push(max(r.arrival, self.now), _ARRIVE, key, r)
 
     # -- observability -----------------------------------------------------
     def queue_depth(self) -> int:

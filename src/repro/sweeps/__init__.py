@@ -11,7 +11,8 @@ reduces stored values to mean/std/95%-CI approximation-ratio tables.
 
     python -m repro.sweeps --scenario flash_crowd --seeds 0:32
 """
-from .aggregate import fig3_table, fig4_table, ratio_frame, summarize, table
+from .aggregate import (fig3_table, fig4_table, frontier_table, ratio_frame,
+                        summarize, table)
 from .shard import (HOST_PARITY_ATOL, SweepResult, auto_chunk_size,
                     bytes_per_item, run_sweep)
 from .spec import (ACCEL_ALGOS, HOST_ALGOS, KINDS, SERVING_POLICIES,
@@ -26,4 +27,5 @@ __all__ = [
     "SweepResult", "run_sweep", "auto_chunk_size", "bytes_per_item",
     "HOST_PARITY_ATOL",
     "summarize", "table", "ratio_frame", "fig3_table", "fig4_table",
+    "frontier_table",
 ]

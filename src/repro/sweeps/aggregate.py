@@ -22,7 +22,8 @@ import numpy as np
 
 from .shard import SweepResult
 
-__all__ = ["summarize", "ratio_frame", "table", "fig3_table", "fig4_table"]
+__all__ = ["basic_stats", "summarize", "ratio_frame", "table",
+           "fig3_table", "fig4_table", "frontier_table"]
 
 #: normal-approximation 95% confidence half-width multiplier
 _Z95 = 1.959963984540054
@@ -37,7 +38,10 @@ def _nan_quiet(fn, *args, **kwargs):
         return fn(*args, **kwargs)
 
 
-def _stats(a: np.ndarray) -> Dict[str, float]:
+def basic_stats(a: np.ndarray) -> Dict[str, float]:
+    """NaN-dropping mean/std/95%-CI of a value set — the single source of
+    the confidence arithmetic for every consumer (these tables, the
+    :mod:`repro.tuning` fit)."""
     a = np.asarray(a, np.float64).ravel()
     a = a[~np.isnan(a)]
     n = a.size
@@ -45,6 +49,9 @@ def _stats(a: np.ndarray) -> Dict[str, float]:
     std = float(a.std(ddof=1)) if n > 1 else 0.0
     ci = _Z95 * std / np.sqrt(n) if n > 1 else 0.0
     return {"n": int(n), "mean": mean, "std": std, "ci95": float(ci)}
+
+
+_stats = basic_stats
 
 
 def ratio_frame(result: SweepResult, ref: str = "auto"
@@ -117,6 +124,34 @@ def fig3_table(result: SweepResult, ref: str = "auto") -> str:
             else:
                 row += f"{'—':>12}"
         lines.append(row)
+    return "\n".join(lines)
+
+
+def frontier_table(rows: "Dict[str, List[Dict]]") -> str:
+    """Fig-style Pareto-frontier table (arXiv:2011.08381's accuracy/time
+    view) from :func:`repro.tuning.pareto.frontier_rows` output.
+
+    One row per stored (switching_cost × stickiness × policy) operating
+    point, grouped by scenario and sorted by realized latency;
+    ``QF``/``AF`` mark membership of the (QoS ↑, miss ↓) and
+    (accuracy ↑, latency ↓) frontiers with a ``*``.
+    """
+    lines = [f"{'scenario':<22} {'sw_cost':>7} {'stick':>6} {'policy':<9} "
+             f"{'qos':>7} {'miss':>6} {'acc':>6} {'lat_s':>8} "
+             f"{'QF':>3} {'AF':>3}"]
+    for scenario in sorted(rows):
+        # NaN latency (a point that served nothing) sorts last, stably
+        pts = sorted(rows[scenario],
+                     key=lambda p: (np.isnan(p["mean_latency_s"]),
+                                    p["mean_latency_s"], -p["mean_qos"]))
+        for p in pts:
+            lines.append(
+                f"{scenario:<22} {p['switching_cost']:>7.2f} "
+                f"{p['stickiness']:>6.2f} {p['policy']:<9} "
+                f"{p['mean_qos']:>7.4f} {p['miss_rate']:>6.3f} "
+                f"{p['mean_accuracy']:>6.3f} {p['mean_latency_s']:>8.4f} "
+                f"{'*' if p['qos_frontier'] else '':>3} "
+                f"{'*' if p['acc_lat_frontier'] else '':>3}")
     return "\n".join(lines)
 
 

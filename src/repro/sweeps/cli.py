@@ -131,8 +131,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--kind", choices=list(KINDS), default="sigma",
                     help="sigma: analytic objective (default); serving: "
                          "realized QoS through the full serving engine "
-                         "(algos become queue policies edf/fcfs, and "
-                         "--override also accepts switching_cost, "
+                         "(algos become queue policies edf/fcfs, or "
+                         "'feedback' for the closed-loop repro.tuning "
+                         "placer; --override also accepts switching_cost, "
                          "stickiness, max_batch, ...)")
     ap.add_argument("--seeds", type=parse_seeds, default=(0,),
                     help="'a:b' range or comma list (default: 0)")

@@ -355,6 +355,7 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
                 meta = {"scenario": scenario, "overrides": dict(overrides),
                         "algo": algo, "executor": executor,
                         "path": "serving", "seed": int(seed),
+                        "horizon": int(T),   # lets repro.tuning replay runs
                         "n_devices": 1, "wall_s": round(wall, 6),
                         "B": len(chunk)}
                 if store is not None:

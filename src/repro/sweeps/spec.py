@@ -51,7 +51,13 @@ __all__ = [
 ]
 
 #: Bump when the evaluator semantics change — invalidates stored results.
-SCHEMA_VERSION = 1
+#: v2: the serving horizon re-routes backlog off evicted implementations
+#: (TickReport.requeued) and unset placer knobs resolve through the
+#: fitted repro.tuning lookup table — both change realized serving
+#: values. Table refreshes need no bump: the resolved knobs are baked
+#: into every serving item's overrides at expansion, so its keys change
+#: by themselves (see SweepSpec._resolve_serving_knobs).
+SCHEMA_VERSION = 2
 
 #: Algorithms with a batched accelerator implementation (vmap / shard_map).
 ACCEL_ALGOS = ("egp", "agp")
@@ -59,9 +65,12 @@ ACCEL_ALGOS = ("egp", "agp")
 #: Host-only algorithms (NumPy reference implementations in repro.core).
 HOST_ALGOS = ("egp", "agp", "agp_literal", "opt", "sck", "rnd")
 
-#: The ``algos`` axis of a serving-kind sweep: continuous-batching queue
-#: policies of :mod:`repro.serving.scheduler`.
-SERVING_POLICIES = ("edf", "fcfs")
+#: The ``algos`` axis of a serving-kind sweep: the continuous-batching
+#: queue policies of :mod:`repro.serving.scheduler`, plus ``"feedback"``
+#: — EDF queueing under the closed-loop
+#: :class:`repro.tuning.controller.FeedbackPlacer`, so open-loop vs
+#: closed-loop placement sweeps ride the same resumable engine.
+SERVING_POLICIES = ("edf", "fcfs", "feedback")
 
 #: Sweep kinds: ``"sigma"`` scores placements with the analytic objective
 #: σ; ``"serving"`` drives scenario traffic through the full serving
@@ -214,6 +223,30 @@ class SweepSpec:
             return "accel"
         return "host"
 
+    def _resolve_serving_knobs(self, scenario: str,
+                               overrides: Tuple[Tuple[str, Any], ...]
+                               ) -> Tuple[Tuple[str, Any], ...]:
+        """Bake the fitted placer knobs into a serving grid row's
+        overrides at *expansion* time. A serving value genuinely depends
+        on the knobs the tuning table recommends for unset keys, so they
+        must be part of the item (key, stored meta): a later table
+        refresh (or ``$REPRO_TUNING_TABLE`` change) then yields new keys
+        — the store recomputes instead of silently mixing results from
+        two operating points — and fits can read the actual knobs back
+        from any store, pinned or not."""
+        have = dict(overrides)
+        missing = [k for k in ("switching_cost", "stickiness")
+                   if k not in have]
+        if not missing:
+            return overrides
+        from repro.tuning.fit import recommend  # deferred: no cycle
+        rec = recommend(scenario)
+        if not rec:
+            return overrides
+        for k in missing:
+            have[k] = rec[k]
+        return _canon_overrides(have)
+
     def scenario_overrides(self, overrides: Tuple[Tuple[str, Any], ...]
                            ) -> Dict[str, Any]:
         """Overrides that apply to the *scenario* (serving-kind grids may
@@ -240,6 +273,9 @@ class SweepSpec:
         for scenario in self.scenarios:
             for overrides in self.override_grid:
                 T = self.ticks_for(scenario, overrides)
+                if self.kind == "serving":
+                    overrides = self._resolve_serving_knobs(scenario,
+                                                            overrides)
                 for algo in self.algos:
                     ex = self.executor_of(algo)
                     mi = self.max_iters if ex == "accel" else 0

@@ -72,6 +72,12 @@ class SweepStore:
     def completed(self, keys: Iterable[str]) -> List[str]:
         return [k for k in keys if k in self._index]
 
+    def keys(self) -> List[str]:
+        """Every completed item key, in manifest (insertion) order —
+        lets store *consumers* (e.g. :mod:`repro.tuning.fit`) walk a
+        possibly-partial store without reconstructing its spec."""
+        return list(self._index)
+
     # ------------------------------------------------------------------
     def write_spec(self, spec_json: Mapping[str, Any]) -> None:
         path = self.root / "spec.json"

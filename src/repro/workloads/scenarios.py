@@ -17,7 +17,8 @@ dynamics, and an optional edge-failure schedule into a pure generator of
 
 Registered scenarios (``list_scenarios()``): ``steady``, ``diurnal``,
 ``flash_crowd``, ``mobility_churn``, ``edge_failure``, ``trace_replay``
-(the bundled real-world-style day trace under ``examples/data/``).
+and ``trace_replay_bursty`` (the bundled real-world-style day and bursty
+weekend traces under ``examples/data/``).
 """
 from __future__ import annotations
 
@@ -303,17 +304,35 @@ def mobility_churn() -> Scenario:
 _FALLBACK_DAY_TRACE = (18, 14, 11, 9, 8, 10, 16, 27, 44, 58, 66, 72,
                        78, 74, 69, 63, 60, 65, 74, 86, 92, 81, 55, 31)
 
+#: Fallback weekend trace (48 hourly counts, bursty: flash events jump
+#: ≥ 30 requests hour-over-hour) if examples/data/ is not shipped.
+_FALLBACK_WEEKEND_TRACE = (
+    30, 24, 18, 13, 10, 9, 11, 15, 22, 31, 42, 55,
+    90, 58, 52, 49, 53, 64, 95, 92, 88, 72, 55, 42,
+    33, 26, 19, 14, 10, 8, 9, 13, 20, 30, 44, 58,
+    66, 91, 93, 76, 60, 57, 84, 70, 64, 48, 33, 24)
 
-def _bundled_day_trace() -> TraceArrivals:
+
+def _bundled_trace(filename: str, fallback: Tuple[int, ...]
+                   ) -> TraceArrivals:
     # registration happens at import time, so a missing/corrupt trace file
     # (partial checkout, installed package without examples/) must degrade
     # to the identical built-in counts, never break `import repro.workloads`
     path = Path(__file__).resolve().parents[3] / "examples" / "data" / \
-        "diurnal_trace.csv"
+        filename
     try:
         return TraceArrivals.from_file(path)
     except (OSError, ValueError):
-        return TraceArrivals(counts=_FALLBACK_DAY_TRACE)
+        return TraceArrivals(counts=fallback)
+
+
+def _bundled_day_trace() -> TraceArrivals:
+    return _bundled_trace("diurnal_trace.csv", _FALLBACK_DAY_TRACE)
+
+
+def _bundled_weekend_trace() -> TraceArrivals:
+    return _bundled_trace("bursty_weekend_trace.csv",
+                          _FALLBACK_WEEKEND_TRACE)
 
 
 @register_scenario
@@ -330,6 +349,24 @@ def trace_replay() -> Scenario:
                     "trace (examples/data/diurnal_trace.csv): overnight "
                     "trough, lunchtime plateau, evening peak — the first "
                     "real-world-trace workload.",
+    )
+
+
+@register_scenario
+def trace_replay_bursty() -> Scenario:
+    """Replay the bundled bursty weekend trace, tick = one hour."""
+    return Scenario(
+        name="trace_replay_bursty",
+        arrivals=_bundled_weekend_trace(),
+        popularity_factory=lambda s: ZipfPopularity(
+            s, exponent=1.2, drift_period=6, drift_step=3),
+        churn=ChurnModel(lifetime=10),
+        n_ticks=48,
+        description="Exact replay of the bundled 48-hour weekend trace "
+                    "(examples/data/bursty_weekend_trace.csv): flash "
+                    "events jump ≥30 requests hour-over-hour while the "
+                    "popularity head drifts — the second real trace, and "
+                    "the bursty counterpoint the auto-tuner fits against.",
     )
 
 

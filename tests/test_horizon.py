@@ -63,15 +63,20 @@ def test_horizon_deterministic_byte_identical():
     assert a.tick_values().tobytes() == b.tick_values().tobytes()
 
 
-def test_edf_never_worse_than_fcfs_on_mean_misses():
-    """QoS-aware admission: across seeds, EDF's mean deadline misses must
-    not exceed FCFS's (the paper's QoS-first ordering argument)."""
+def test_edf_never_worse_than_fcfs_on_mean_realized_qos():
+    """QoS-aware admission: across seeds, EDF's mean realized QoS must not
+    fall below FCFS's (the paper's QoS-first ordering argument, asserted
+    on the objective the engine optimizes). Raw miss *counts* are no
+    longer a valid proxy since eviction requeue landed: re-routed backlog
+    re-enters with its original (often blown) deadline, and EDF's
+    overload pathology — spending slots on doomed earliest-deadline work
+    — can cost it a few extra misses while still winning on QoS."""
     edf, fcfs = [], []
     for seed in range(4):
-        edf.append(run_horizon(_cfg(seed=seed)).deadline_misses)
+        edf.append(run_horizon(_cfg(seed=seed)).mean_realized_qos)
         fcfs.append(run_horizon(
-            _cfg(seed=seed, policy="fcfs")).deadline_misses)
-    assert np.mean(edf) <= np.mean(fcfs) + 1e-9
+            _cfg(seed=seed, policy="fcfs")).mean_realized_qos)
+    assert np.mean(edf) >= np.mean(fcfs) - 1e-9
 
 
 def test_placer_knobs_flow_through():
@@ -98,6 +103,28 @@ def test_switching_cost_is_realized_as_load_latency():
     assert costly.per_tick[0].mean_realized_qos < \
         cheap.per_tick[0].mean_realized_qos
     assert costly.mean_realized_qos < cheap.mean_realized_qos
+
+
+def test_evicted_backlog_is_requeued_through_oms():
+    """Re-placement that evicts a resident implementation mid-horizon must
+    pull its queued (not in-flight) backlog and re-route it through OMS —
+    counted in TickReport.requeued — with conservation intact (unroutable
+    requests re-attribute as dropped at their arrival tick)."""
+    res = run_horizon(_cfg(seed=0, n_ticks=4))
+    assert sum(t.requeued for t in res.per_tick) > 0
+    for t in res.per_tick:
+        assert t.served + t.dropped == t.submitted
+        assert t.stickiness == res.config.stickiness  # open loop: constant
+    assert res.served == len(res.requests)
+    # re-routed requests still finish with sane timing (admission never
+    # happens before the eviction tick even though arrival is kept)
+    for r in res.requests:
+        assert r.finish >= r.start >= r.arrival >= 0.0
+    # deterministic: the requeue path replays byte-identically
+    again = run_horizon(_cfg(seed=0, n_ticks=4))
+    assert [t.requeued for t in again.per_tick] == \
+        [t.requeued for t in res.per_tick]
+    assert res.tick_values().tobytes() == again.tick_values().tobytes()
 
 
 def test_split_serving_overrides_and_config():

@@ -42,7 +42,8 @@ def test_work_item_keys_are_schema_stable():
     key = spec.expand()[0].key()
     assert key == spec.expand()[0].key()
     assert len(key) == 24 and int(key, 16) >= 0
-    assert key == "d713caab4c0887f35c5851e0"
+    # v2: serving requeue + tuning-table knob resolution (see spec.py)
+    assert key == "20d10f7a4fd1283792265c94"
     # a different accelerator iteration cap is a different result
     capped = SweepSpec(scenarios=("steady",), seeds=(0,), n_ticks=1,
                        max_iters=8)

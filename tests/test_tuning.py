@@ -1,0 +1,365 @@
+"""repro.tuning — lookup-table fit→serialize→recommend round-trip,
+JAX-vs-NumPy Pareto dominance parity, closed-loop FeedbackPlacer
+properties (clamps, ≥ worst open-loop grid point, byte-identical replay),
+and the ``python -m repro.tuning`` CLI."""
+import json
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.serving.horizon import HorizonConfig, run_horizon
+from repro.sweeps import SweepSpec, frontier_table, run_sweep
+from repro.tuning import (STICKINESS_MAX, STICKINESS_MIN, FeedbackPlacer,
+                          fit_table, frontier_points, frontier_rows,
+                          load_table, pareto_mask_jax, pareto_mask_np,
+                          read_serving_records, recommend, save_table)
+from repro.tuning.fit import TABLE_ENV_VAR
+
+#: Shrunk scenario + congested load point (see tests/test_horizon.py).
+SMALL = {"n_user_slots": 32, "n_services": 8, "max_impls": 3, "n_edges": 4}
+LOAD = {"prompt_tokens": 768, "new_tokens": 64, "max_batch": 4}
+#: The open-loop (switching_cost, stickiness) grid the fit/frontier/
+#: feedback tests share.
+KNOBS = ((0.0, 0.0), (0.0, 3.0), (2.0, 0.0), (2.0, 3.0))
+
+
+def _grid():
+    return tuple(
+        tuple(sorted({**SMALL, **LOAD, "switching_cost": sc,
+                      "stickiness": st_}.items()))
+        for sc, st_ in KNOBS)
+
+
+def _serving_store(tmp_path, scenarios=("flash_crowd",), seeds=(0, 1),
+                   n_ticks=2):
+    spec = SweepSpec(kind="serving", scenarios=scenarios, seeds=seeds,
+                     n_ticks=n_ticks, algos=("edf", "fcfs"),
+                     override_grid=_grid())
+    store_dir = tmp_path / "store"
+    run_sweep(spec, store_dir=store_dir)
+    return store_dir
+
+
+# ===========================================================================
+# fit → serialize → recommend round-trip
+# ===========================================================================
+
+def test_fit_roundtrip_and_recommend(tmp_path):
+    store = _serving_store(tmp_path, scenarios=("steady", "flash_crowd"))
+    table = fit_table(store)
+    assert set(table["scenarios"]) == {"steady", "flash_crowd"}
+
+    # the fitted knobs are the mean-realized-QoS argmax over the stored
+    # edf grid (recomputed here independently, CI tie-break aside)
+    recs = [r for r in read_serving_records(store)
+            if r.scenario == "flash_crowd" and r.policy == "edf"]
+    cells = {}
+    for r in recs:
+        cells.setdefault((r.switching_cost, r.stickiness),
+                         []).append(r.value)
+    means = {k: np.mean(v) for k, v in cells.items()}
+    row = table["scenarios"]["flash_crowd"]
+    assert row["policy"] == "edf" and row["grid_points"] == len(KNOBS)
+    assert means[(row["switching_cost"], row["stickiness"])] == \
+        pytest.approx(row["mean_qos"], abs=1e-5)
+    assert row["mean_qos"] >= max(means.values()) - row["ci95"] - 1e-9
+
+    # serialize → load → recommend round-trips exactly
+    path = save_table(table, tmp_path / "table.json")
+    loaded = load_table(path)
+    assert loaded["scenarios"] == json.loads(
+        json.dumps(table["scenarios"]))  # same content through JSON
+    rec = recommend("flash_crowd", path=path)
+    assert rec == {"switching_cost": row["switching_cost"],
+                   "stickiness": row["stickiness"]}
+    assert recommend("not_a_scenario", path=path) is None
+    assert recommend("steady", path=tmp_path / "missing.json") is None
+
+
+def test_fit_rejects_stores_without_serving_items(tmp_path):
+    sigma = SweepSpec(scenarios=("steady",), seeds=(0,), n_ticks=1,
+                      algos=("egp",), force_host=("egp",))
+    d = tmp_path / "sigma_store"
+    run_sweep(sigma, store_dir=d)
+    with pytest.raises(ValueError, match="serving"):
+        fit_table(d)
+
+
+def test_from_overrides_consults_table_for_unset_knobs(
+        tmp_path, monkeypatch):
+    table = {"table_version": 1, "sweep_schema_version": 2,
+             "source": "test",
+             "scenarios": {"steady": {
+                 "switching_cost": 0.25, "stickiness": 7.5,
+                 "policy": "edf", "mean_qos": 0.9, "ci95": 0.0,
+                 "n": 4, "grid_points": 4}}}
+    path = save_table(table, tmp_path / "t.json")
+    monkeypatch.setenv(TABLE_ENV_VAR, str(path))
+
+    # both knobs unset → both fitted values
+    cfg = HorizonConfig.from_overrides("steady", {}, "edf", seed=0)
+    assert cfg.switching_cost == 0.25 and cfg.stickiness == 7.5
+    # explicit override wins per knob; the other is still table-filled
+    cfg = HorizonConfig.from_overrides("steady", {"stickiness": 1.0},
+                                       "edf", seed=0)
+    assert cfg.switching_cost == 0.25 and cfg.stickiness == 1.0
+    # scenario without a row → dataclass defaults
+    cfg = HorizonConfig.from_overrides("diurnal", {}, "edf", seed=0)
+    assert cfg.switching_cost == HorizonConfig.switching_cost
+    assert cfg.stickiness == HorizonConfig.stickiness
+    # direct construction never consults the table
+    assert HorizonConfig(scenario="steady").switching_cost == \
+        HorizonConfig.switching_cost
+
+
+def test_serving_expansion_bakes_table_knobs(tmp_path, monkeypatch):
+    """A serving item's value depends on the knobs the table resolves for
+    unset keys, so expansion must bake them into the item overrides: keys
+    and stored meta capture the actual operating point, and a table
+    refresh changes the keys (resume recomputes, never silently mixes)."""
+    table = {"table_version": 1, "sweep_schema_version": 2,
+             "source": "test",
+             "scenarios": {"steady": {
+                 "switching_cost": 0.25, "stickiness": 7.5,
+                 "policy": "edf", "mean_qos": 0.9, "ci95": 0.0,
+                 "n": 4, "grid_points": 4}}}
+    path = save_table(table, tmp_path / "t.json")
+    monkeypatch.setenv(TABLE_ENV_VAR, str(path))
+
+    def spec():
+        return SweepSpec(kind="serving", scenarios=("steady",),
+                         seeds=(0,), n_ticks=1, algos=("edf",))
+
+    item = spec().expand()[0]
+    ov = dict(item.overrides)
+    assert ov["switching_cost"] == 0.25 and ov["stickiness"] == 7.5
+    # refreshing the table re-keys the items
+    table["scenarios"]["steady"]["stickiness"] = 1.5
+    save_table(table, path)
+    item2 = spec().expand()[0]
+    assert dict(item2.overrides)["stickiness"] == 1.5
+    assert item2.key() != item.key()
+    # explicitly pinned knobs never consult the table
+    pinned = SweepSpec(kind="serving", scenarios=("steady",), seeds=(0,),
+                       n_ticks=1, algos=("edf",),
+                       override_grid=((("stickiness", 2.0),
+                                       ("switching_cost", 1.0)),))
+    assert dict(pinned.expand()[0].overrides) == \
+        {"stickiness": 2.0, "switching_cost": 1.0}
+
+
+# ===========================================================================
+# Pareto dominance: NumPy reference + JAX parity
+# ===========================================================================
+
+def test_pareto_mask_np_reference_cases():
+    # maximize both: (2,2) dominates (1,1); duplicates both survive
+    pts = np.array([[1.0, 1.0], [2.0, 2.0], [2.0, 2.0], [0.5, 3.0]])
+    keep = pareto_mask_np(pts, maximize=(True, True))
+    assert keep.tolist() == [False, True, True, True]
+    # orientation flip: minimize the second metric — (1, 0.4) trades
+    # metric-1 for the lowest cost, (2, 0.5) the reverse, (2, 2) loses
+    pts = np.array([[1.0, 0.4], [2.0, 2.0], [2.0, 0.5]])
+    keep = pareto_mask_np(pts, maximize=(True, False))
+    assert keep.tolist() == [True, False, True]
+    # equal-on-one-axis: strictly better on the other still dominates
+    pts = np.array([[1.0, 5.0], [1.0, 7.0]])
+    assert pareto_mask_np(pts, maximize=(True, True)).tolist() == \
+        [False, True]
+    assert pareto_mask_np(np.zeros((0, 2)), maximize=(True, True)).size == 0
+    with pytest.raises(ValueError):
+        pareto_mask_np(np.zeros((3, 2)), maximize=(True,))
+    with pytest.raises(ValueError):
+        pareto_mask_np(np.zeros(3), maximize=(True,))
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("shape", [(1, 2), (17, 2), (64, 3), (128, 4)])
+def test_pareto_jax_matches_numpy_on_random_grids(seed, dtype, shape):
+    rng = np.random.default_rng(seed)
+    # float32 runs on the device default; float64 inputs must be compared
+    # in float64 (scoped x64) — either way the masks agree bit-for-bit
+    # (comparisons only, nothing accumulates)
+    pts = rng.normal(size=shape).astype(dtype)
+    # quantize to force plenty of exact ties/duplicates across points
+    pts = np.round(pts, 1)
+    maximize = [bool(b) for b in rng.integers(0, 2, size=shape[1])]
+    np.testing.assert_array_equal(pareto_mask_np(pts, maximize),
+                                  pareto_mask_jax(pts, maximize))
+
+
+def test_pareto_jax_keeps_sub_f32_resolution():
+    # two points differing below float32 resolution: a silent f32 cast
+    # would merge them and keep both; float64 must dominate-out the lower
+    pts = np.array([[0.5, 1.0], [0.5 + 1e-12, 1.0]])
+    np.testing.assert_array_equal(
+        pareto_mask_jax(pts, (True, False)), [False, True])
+
+
+def test_frontier_points_from_store(tmp_path):
+    store = _serving_store(tmp_path)
+    frontiers = frontier_points(store)
+    assert set(frontiers) == {"flash_crowd"}
+    pts = frontiers["flash_crowd"]
+    # one point per (knob grid point × policy), metrics well-formed
+    assert len(pts) == len(KNOBS) * 2
+    assert all(0.0 <= p.mean_qos <= 1.0 and 0.0 <= p.miss_rate <= 1.0
+               for p in pts)
+    # at least one point on each frontier, and flagged sets really are
+    # non-dominated under the reference mask
+    assert any(p.qos_frontier for p in pts)
+    assert any(p.acc_lat_frontier for p in pts)
+    keep = pareto_mask_np(
+        np.array([[p.mean_qos, p.miss_rate] for p in pts]),
+        maximize=(True, False))
+    assert [bool(k) for k in keep] == [p.qos_frontier for p in pts]
+    # fig-style rendering includes every operating point
+    text = frontier_table(frontier_rows(frontiers))
+    assert text.count("flash_crowd") == len(pts)
+
+
+def test_frontier_never_stars_nan_points(tmp_path, monkeypatch):
+    """A grid point that served nothing (NaN accuracy/latency) is not an
+    operating point: all-False NaN comparisons would make it undominatable
+    — it must never be flagged as frontier-optimal."""
+    import repro.tuning.pareto as pareto_mod
+
+    store = _serving_store(tmp_path)
+    real = pareto_mod._replay_metrics
+
+    def nan_for_free_knobs(scenario, overrides, policy, seeds, n_ticks):
+        m = real(scenario, overrides, policy, seeds, n_ticks)
+        ov = dict(overrides)
+        if ov["switching_cost"] == 0.0 and ov["stickiness"] == 0.0:
+            m = {**m, "mean_accuracy": float("nan"),
+                 "mean_latency_s": float("nan")}
+        return m
+
+    monkeypatch.setattr(pareto_mod, "_replay_metrics", nan_for_free_knobs)
+    pts = pareto_mod.frontier_points(store)["flash_crowd"]
+    nan_pts = [p for p in pts if np.isnan(p.mean_latency_s)]
+    assert nan_pts and not any(p.acc_lat_frontier for p in nan_pts)
+    assert any(p.acc_lat_frontier for p in pts)
+    # NaN rows render (sorted last), no crash
+    text = frontier_table(frontier_rows({"flash_crowd": pts}))
+    assert text.splitlines()[-1].count("nan") >= 1
+
+
+# ===========================================================================
+# FeedbackPlacer — closed-loop properties
+# ===========================================================================
+
+def _cfg(**kw):
+    base = dict(scenario="flash_crowd", overrides=tuple(SMALL.items()),
+                policy="edf", seed=0, n_ticks=6, **LOAD)
+    base.update(kw)
+    return HorizonConfig(**base)
+
+
+@settings(max_examples=25, deadline=None)
+@given(obs=st.lists(st.tuples(st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+                              st.integers(0, 50)),
+                    min_size=1, max_size=40),
+       gain=st.floats(1.05, 4.0),
+       s0=st.floats(-5.0, 20.0))
+def test_feedback_stickiness_always_within_clamps(obs, gain, s0):
+    fp = FeedbackPlacer(stickiness=s0, gain=gain)
+    assert STICKINESS_MIN <= fp.current_stickiness <= STICKINESS_MAX
+    for qos, miss, n in obs:
+        s = fp.observe(qos, miss, n)
+        assert STICKINESS_MIN <= s <= STICKINESS_MAX
+
+
+def test_feedback_controller_direction():
+    fp = FeedbackPlacer(stickiness=2.0, gain=2.0, target_miss=0.1)
+    # sustained misses → multiplicative increase
+    s = [fp.observe(0.8, 0.9, 10) for _ in range(3)][-1]
+    assert s > 2.0
+    # no-completion ticks carry no signal
+    assert fp.observe(0.0, 0.0, 0) == s
+    # misses under target + declining QoS → decrease
+    fp2 = FeedbackPlacer(stickiness=4.0, gain=2.0, target_miss=0.5)
+    fp2.observe(0.95, 0.0, 10)          # establishes the baseline
+    for _ in range(4):
+        fp2.observe(0.05, 0.0, 10)      # QoS collapses, misses fine
+    assert fp2.current_stickiness < 4.0
+    with pytest.raises(ValueError):
+        FeedbackPlacer(gain=1.0)
+    with pytest.raises(ValueError):
+        FeedbackPlacer(ewma=0.0)
+
+
+def test_feedback_horizon_clamped_and_byte_identical():
+    res = run_horizon(_cfg(policy="feedback"))
+    assert all(STICKINESS_MIN <= t.stickiness <= STICKINESS_MAX
+               for t in res.per_tick)
+    # the controller starts from the configured stickiness
+    assert res.per_tick[0].stickiness == res.config.stickiness
+    again = run_horizon(_cfg(policy="feedback"))
+    fa = np.array([r.finish for r in res.requests])
+    fb = np.array([r.finish for r in again.requests])
+    assert fa.tobytes() == fb.tobytes()
+    assert res.tick_values().tobytes() == again.tick_values().tobytes()
+
+
+def test_feedback_beats_worst_open_loop_grid_point():
+    """Closed-loop regression bound: on a fixed seed the feedback policy's
+    mean realized QoS must be at least the *worst* fixed-(switching_cost,
+    stickiness) grid point — adapting online must not be worse than the
+    worst hand-picked setting it adapts between."""
+    open_loop = [
+        run_horizon(_cfg(switching_cost=sc, stickiness=st_))
+        .mean_realized_qos
+        for sc, st_ in KNOBS]
+    fb = run_horizon(_cfg(policy="feedback")).mean_realized_qos
+    assert fb >= min(open_loop) - 1e-9
+
+
+def test_feedback_is_a_sweepable_policy(tmp_path):
+    spec = SweepSpec(kind="serving", scenarios=("flash_crowd",),
+                     seeds=(0,), n_ticks=2, algos=("edf", "feedback"),
+                     override_grid=(tuple(sorted({**SMALL, **LOAD}.items())),))
+    assert spec.executor_of("feedback") == "serving"
+    res = run_sweep(spec, store_dir=tmp_path / "store")
+    assert res.complete
+    key = [k for k in res.values if k[1] == "feedback"]
+    assert key and np.isfinite(res.values[key[0]]).all()
+    # resumed values replay bitwise (the sweeps resume contract holds for
+    # the closed-loop policy too)
+    again = run_sweep(spec, store_dir=tmp_path / "store")
+    assert again.execution["chunks_computed"] == 0
+    np.testing.assert_array_equal(res.values[key[0]],
+                                  again.values[key[0]])
+
+
+# ===========================================================================
+# CLI
+# ===========================================================================
+
+def test_tuning_cli_fit_pareto_show(tmp_path, capsys):
+    from repro.tuning.cli import main
+
+    store = _serving_store(tmp_path)
+    assert main(["fit", "--store", str(store)]) == 0
+    out = capsys.readouterr().out
+    assert "flash_crowd" in out
+    table_path = store / "tuning_table.json"
+    assert table_path.exists()
+    table = json.loads(table_path.read_text())
+    assert set(table["scenarios"]) == {"flash_crowd"}
+
+    rows_json = tmp_path / "frontier.json"
+    assert main(["pareto", "--store", str(store),
+                 "--json", str(rows_json)]) == 0
+    out = capsys.readouterr().out
+    assert "QF" in out and "flash_crowd" in out
+    rows = json.loads(rows_json.read_text())
+    assert len(rows["flash_crowd"]) == len(KNOBS) * 2
+
+    assert main(["show", "--table", str(table_path)]) == 0
+    assert "flash_crowd" in capsys.readouterr().out
+    assert main(["show", "--table", str(tmp_path / "nope.json")]) == 1
+    capsys.readouterr()

@@ -33,7 +33,7 @@ ALL_SCENARIOS = list_scenarios()
 def test_registry_has_the_registered_scenarios():
     assert set(ALL_SCENARIOS) == {"steady", "diurnal", "flash_crowd",
                                   "mobility_churn", "edge_failure",
-                                  "trace_replay"}
+                                  "trace_replay", "trace_replay_bursty"}
 
 
 def test_trace_arrivals_from_file(tmp_path):
@@ -56,6 +56,19 @@ def test_trace_replay_scenario_follows_bundled_trace():
     counts = [sc.active_users_at(0, t) for t in range(24)]
     assert counts == list(sc.arrivals.counts)[:24]  # exact replay
     assert max(counts) >= 2 * min(counts)  # a real day shape, not flat
+
+
+def test_trace_replay_bursty_scenario_is_bursty():
+    sc = get_scenario("trace_replay_bursty")
+    assert isinstance(sc.arrivals, TraceArrivals)
+    assert sc.n_ticks == 48 and len(sc.arrivals.counts) == 48
+    counts = np.array([sc.active_users_at(7, t) for t in range(48)])
+    assert counts.tolist() == list(sc.arrivals.counts)  # exact replay
+    # bursty: a flash event jumps ≥ 30 requests hour-over-hour — sharper
+    # than any transition in the smooth day trace
+    assert int(np.abs(np.diff(counts)).max()) >= 30
+    day = np.array(get_scenario("trace_replay").arrivals.counts)
+    assert np.abs(np.diff(counts)).max() > np.abs(np.diff(day)).max()
 
 
 @pytest.mark.parametrize("name", ALL_SCENARIOS)
