@@ -1,0 +1,87 @@
+"""Fleet scaling benchmark — items/s at 1, 2, 4 workers on one grid.
+
+For each worker count the same small ``kind="serving"`` grid is planned
+into a fresh fleet root, drained by N forked local workers
+(:func:`repro.fleet.spawn_local_workers` — real subprocesses, so the
+measurement includes dispatch/claim/merge overhead, exactly what a
+multi-host deployment pays), merged, and verified complete; the reported
+rate is items per second of end-to-end wall clock. The ``fleet_scaling``
+row of ``benchmarks/run.py``.
+
+Serving horizons are host-side event-loop work, so scaling is ~linear
+until task granularity (one seed's horizon) starves the queue; the
+benchmark also reports the single-process engine rate as the 0-overhead
+baseline.
+
+    PYTHONPATH=src python -m benchmarks.fleet_scaling
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, Sequence
+
+from repro.fleet import merge, plan, reap, run_worker, spawn_local_workers
+from repro.sweeps import SweepSpec, SweepStore, run_sweep
+
+#: Shrunk scenario (see tests/test_horizon.py) — keeps horizons fast.
+SMALL = {"n_user_slots": 32, "n_services": 8, "max_impls": 3, "n_edges": 4}
+
+
+def _spec(seeds: Sequence[int], n_ticks: int) -> SweepSpec:
+    grid = tuple(
+        tuple(sorted({**SMALL, "switching_cost": sc,
+                      "stickiness": st}.items()))
+        for sc, st in ((0.0, 0.0), (2.0, 3.0)))
+    return SweepSpec(kind="serving", scenarios=("steady", "flash_crowd"),
+                     seeds=tuple(seeds), n_ticks=n_ticks,
+                     algos=("edf",), override_grid=grid)
+
+
+def run(worker_counts: Sequence[int] = (1, 2, 4),
+        seeds: Sequence[int] = (0, 1, 2, 3), n_ticks: int = 2,
+        verbose: bool = True) -> Dict:
+    spec = _spec(seeds, n_ticks)
+    n_items = len(spec.expand())
+    out: Dict = {"n_items": n_items, "workers": {}}
+
+    with tempfile.TemporaryDirectory(prefix="fleet_bench_") as tmp:
+        tmp = Path(tmp)
+        # 0-overhead baseline: the single-process engine
+        t0 = time.perf_counter()
+        run_sweep(_spec(seeds, n_ticks), store_dir=tmp / "single")
+        single_s = time.perf_counter() - t0
+        out["single_process_s"] = single_s
+        out["single_items_per_s"] = n_items / single_s
+
+        for n in worker_counts:
+            root, store = tmp / f"fleet_{n}", tmp / f"store_{n}"
+            t0 = time.perf_counter()
+            plan(spec, root, target_store=store)
+            if n <= 1:
+                run_worker(root, owner="bench-0")
+            else:
+                procs = spawn_local_workers(root, n, silence=True)
+                for p in procs:
+                    p.wait()
+                reap(root)
+                run_worker(root, owner="bench-mopup")  # cover stragglers
+            mg = merge(root, store)
+            wall = time.perf_counter() - t0
+            assert mg.get("missing_items") == 0, mg
+            assert len(SweepStore(store)) == n_items
+            out["workers"][n] = {"wall_s": wall,
+                                 "items_per_s": n_items / wall}
+            if verbose:
+                print(f"[fleet_scaling] {n} worker(s): {n_items} items in "
+                      f"{wall:.2f}s = {n_items / wall:.1f} items/s",
+                      flush=True)
+    if verbose:
+        print(f"[fleet_scaling] single-process engine: "
+              f"{out['single_items_per_s']:.1f} items/s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

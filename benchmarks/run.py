@@ -122,6 +122,20 @@ def main() -> None:
          f";frontier={tn['frontier_sizes']['flash_crowd']}"
          f";fit_us={tn['fit_s'] * 1e6:.0f}")
 
+    from benchmarks import fleet_scaling
+    t0 = time.perf_counter()
+    fl = fleet_scaling.run(
+        worker_counts=(1, 2, 4),
+        seeds=(0,) if not args.full else (0, 1, 2, 3),
+        n_ticks=2 if not args.full else 4, verbose=False)
+    dt = (time.perf_counter() - t0) * 1e6 / max(fl["n_items"], 1)
+    per_n = fl["workers"]
+    emit("fleet_scaling", dt,
+         f"items={fl['n_items']}"
+         + "".join(f";w{n}_items_per_s={per_n[n]['items_per_s']:.2f}"
+                   for n in sorted(per_n))
+         + f";single_items_per_s={fl['single_items_per_s']:.2f}")
+
     sc = scenarios.run(seeds=(0, 1) if not args.full else (0, 1, 2, 3),
                        n_ticks=4 if not args.full else 8, verbose=False)
     # us_per_call is the engine's chunked accelerator evaluation (incl.

@@ -1,0 +1,35 @@
+"""repro.fleet — multi-worker sweep dispatch over a lease-based queue.
+
+The horizontal-scale layer between :mod:`repro.sweeps` and the hardware:
+a :class:`~repro.sweeps.spec.SweepSpec` manifest becomes a shared,
+directory-backed work queue (:mod:`~repro.fleet.queue` — atomic rename
+claims, owner+TTL lease files, heartbeat renewal, expired-lease requeue),
+N independent worker processes (:mod:`~repro.fleet.worker`) drain it
+through the existing sweep engine into private stores, and the
+coordinator (:mod:`~repro.fleet.coordinator`) merges them into one
+:class:`~repro.sweeps.store.SweepStore` — deduping by item hash and
+verifying duplicate values bit-for-bit, so a fleet of any worker count
+(including one SIGKILLed mid-chunk and reaped) aggregates byte-identically
+to the single-process ``repro.sweeps`` run of the same spec.
+
+    python -m repro.fleet plan --scenario flash_crowd --seeds 0:32 \\
+        --root experiments/fleet/demo --store experiments/sweeps/demo
+    python -m repro.fleet worker --root experiments/fleet/demo   # × N
+    python -m repro.fleet merge --root experiments/fleet/demo \\
+        --store experiments/sweeps/demo
+
+or, all-local: ``python -m repro.sweeps ... --fleet N``.
+"""
+from .coordinator import (FleetMergeConflict, merge, plan, reap, status,
+                          worker_stores)
+from .queue import DEFAULT_TTL_S, Lease, LeaseQueue, Task, default_owner
+from .worker import (load_fleet_spec, run_worker, spawn_local_workers,
+                     task_spec, worker_store_dir)
+
+__all__ = [
+    "DEFAULT_TTL_S", "Task", "Lease", "LeaseQueue", "default_owner",
+    "task_spec", "run_worker", "spawn_local_workers", "worker_store_dir",
+    "load_fleet_spec",
+    "FleetMergeConflict", "plan", "status", "merge", "reap",
+    "worker_stores",
+]

@@ -1,0 +1,174 @@
+"""Command-line entry point: ``python -m repro.fleet``.
+
+The multi-worker face of :mod:`repro.sweeps` — same grid grammar, but the
+work list becomes a shared lease queue that any number of worker
+processes (one host or many, over a shared filesystem) drain into one
+store::
+
+    # 1. coordinator: expand the grid into the fleet's task queue
+    python -m repro.fleet plan --kind serving --scenario flash_crowd \\
+        --seeds 0:32 --override switching_cost=0 --override \\
+        switching_cost=2 --root experiments/fleet/demo \\
+        --store experiments/sweeps/demo
+
+    # 2. workers: run as many as you like, anywhere that sees the root
+    python -m repro.fleet worker --root experiments/fleet/demo
+
+    # 3. watch / recover / combine
+    python -m repro.fleet status --root experiments/fleet/demo
+    python -m repro.fleet reap   --root experiments/fleet/demo
+    python -m repro.fleet merge  --root experiments/fleet/demo \\
+        --store experiments/sweeps/demo
+
+(Or let ``python -m repro.sweeps ... --fleet N`` do all of it locally.)
+
+A SIGKILLed worker's lease expires and any other worker (or ``reap``)
+requeues its chunk; ``merge`` dedups by item hash and verifies duplicate
+values bit-for-bit, so the merged store is byte-identical in aggregate to
+a single-process run of the same spec.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.sweeps.cli import add_spec_arguments, build_spec
+
+from .coordinator import merge, plan, reap, status
+from .queue import DEFAULT_TTL_S
+from .worker import run_worker
+
+__all__ = ["main"]
+
+
+def _cmd_plan(args: argparse.Namespace) -> int:
+    spec = build_spec(args)
+    out = plan(spec, args.root, target_store=args.store,
+               seeds_per_task=args.seeds_per_task)
+    print(f"[fleet] planned {out['n_tasks']} task(s) / {out['n_items']} "
+          f"item(s) under {out['fleet_root']} "
+          f"(spec {out['fingerprint']}; {out['skipped_tasks']} task(s) "
+          f"already queued, {out['skipped_items']} item(s) already in "
+          f"the target store)")
+    return 0
+
+
+def _cmd_worker(args: argparse.Namespace) -> int:
+    summary = run_worker(args.root, owner=args.owner, ttl=args.ttl,
+                         max_tasks=args.max_tasks,
+                         memory_budget_mb=args.memory_budget_mb,
+                         verbose=args.verbose)
+    if not args.verbose:
+        print(f"[fleet:{summary['owner']}] {summary['n_tasks']} task(s), "
+              f"{summary['n_items']} item(s), stop={summary['stop']}")
+    return 0
+
+
+def _cmd_status(args: argparse.Namespace) -> int:
+    out = status(args.root, target_store=args.store)
+    q = out["queue"]
+    print(f"[fleet] queue: {q['pending']} pending, {q['leased']} leased "
+          f"({q['expired']} expired), {q['done']} done"
+          + (f", {len(q['poisoned'])} POISONED ({', '.join(q['poisoned'])})"
+             if q.get("poisoned") else "")
+          + (f"; spec items: {out['n_spec_items']}"
+             if out.get("n_spec_items") is not None else ""))
+    for name, n in sorted(out["workers"].items()):
+        print(f"  worker {name:<24} {n:>6d} item(s)")
+    if "target_items" in out:
+        missing = out.get("target_missing")
+        print(f"  target store: {out['target_items']} item(s)"
+              + (f", {missing} missing" if missing is not None else ""))
+    if args.json:
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json).write_text(json.dumps(out, indent=1))
+    return 0
+
+
+def _cmd_reap(args: argparse.Namespace) -> int:
+    names = reap(args.root, ttl=args.ttl)
+    print(f"[fleet] requeued {len(names)} expired lease(s)"
+          + (": " + ", ".join(names) if names else ""))
+    return 0
+
+
+def _cmd_merge(args: argparse.Namespace) -> int:
+    out = merge(args.root, args.store)
+    print(f"[fleet] merged {out['merged_items']} item(s) from "
+          f"{len(out['workers'])} worker store(s); "
+          f"{out['duplicate_items']} duplicate(s) verified bit-for-bit; "
+          f"target now holds {out['target_items']} item(s)"
+          + (f", {out['missing_items']} still missing"
+             if out.get("missing_items") else ""))
+    return 0 if not out.get("missing_items") else 2
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fleet",
+        description="Multi-worker sweep dispatch: one spec, one lease "
+                    "queue, N workers, one crash-safe merged store.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    pl = sub.add_parser("plan", help="expand a sweep grid into the fleet "
+                                     "task queue")
+    add_spec_arguments(pl)
+    pl.add_argument("--root", required=True,
+                    help="fleet root directory (queue + worker stores)")
+    pl.add_argument("--store", default=None,
+                    help="target store: seeds already complete there are "
+                         "not enqueued")
+    pl.add_argument("--seeds-per-task", type=int, default=1,
+                    help="seeds per claimable task (default: 1; lease "
+                         "TTL is a worker property — see worker --ttl)")
+    pl.set_defaults(fn=_cmd_plan)
+
+    wk = sub.add_parser("worker", help="claim/execute/append until the "
+                                       "queue drains (SIGTERM = clean "
+                                       "drain after the current task)")
+    wk.add_argument("--root", required=True)
+    wk.add_argument("--owner", default=None,
+                    help="worker id (default: <host>-<pid>)")
+    wk.add_argument("--ttl", type=float, default=DEFAULT_TTL_S)
+    wk.add_argument("--max-tasks", type=int, default=None,
+                    help="exit after N tasks (smoke/testing)")
+    wk.add_argument("--memory-budget-mb", type=float, default=None,
+                    help="accelerator memory budget per in-flight chunk "
+                         "(default: the sweep engine's)")
+    wk.add_argument("--verbose", action="store_true")
+    wk.set_defaults(fn=_cmd_worker)
+
+    st = sub.add_parser("status", help="queue + worker-store accounting")
+    st.add_argument("--root", required=True)
+    st.add_argument("--store", default=None)
+    st.add_argument("--json", default=None, metavar="PATH")
+    st.set_defaults(fn=_cmd_status)
+
+    rp = sub.add_parser("reap", help="requeue expired leases (crash "
+                                     "recovery)")
+    rp.add_argument("--root", required=True)
+    rp.add_argument("--ttl", type=float, default=None,
+                    help="TTL for leases whose block never landed")
+    rp.set_defaults(fn=_cmd_reap)
+
+    mg = sub.add_parser("merge", help="dedup/verify worker stores into "
+                                      "the target store")
+    mg.add_argument("--root", required=True)
+    mg.add_argument("--store", required=True)
+    mg.set_defaults(fn=_cmd_merge)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except ValueError as e:
+        # operator-facing failures (missing queue, spec mismatch, merge
+        # conflict) — report, don't traceback
+        print(f"[fleet] error: {e}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

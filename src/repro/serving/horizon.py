@@ -167,6 +167,10 @@ class TickReport:
     #: stickiness bonus the placer applied this tick (config value for
     #: open-loop policies; the adapted value under policy="feedback")
     stickiness: float = float("nan")
+    #: mean A_sm of the implementations that served this tick's requests
+    #: (NaN if none served) — persisted per item by the sweep engine so
+    #: accuracy/latency frontiers are a pure store read
+    mean_accuracy: float = float("nan")
 
 
 @dataclasses.dataclass
@@ -410,7 +414,9 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
             mean_latency_s=float(lats.mean()) if reqs else float("nan"),
             queue_depth=boundary[t][0], in_flight=boundary[t][1],
             model_loads=m["loads"], placement_value=m["value"],
-            requeued=m["requeued"], stickiness=m["stickiness"]))
+            requeued=m["requeued"], stickiness=m["stickiness"],
+            mean_accuracy=float(np.mean([r.accuracy for r in reqs]))
+            if reqs else float("nan")))
 
     return HorizonResult(config=config, per_tick=per_tick,
                          requests=[r for reqs in tick_reqs for r in reqs])

@@ -13,8 +13,8 @@ reduces stored values to mean/std/95%-CI approximation-ratio tables.
 """
 from .aggregate import (fig3_table, fig4_table, frontier_table, ratio_frame,
                         summarize, table)
-from .shard import (HOST_PARITY_ATOL, SweepResult, auto_chunk_size,
-                    bytes_per_item, run_sweep)
+from .shard import (HOST_PARITY_ATOL, SERVING_METRIC_NAMES, SweepResult,
+                    auto_chunk_size, bytes_per_item, run_sweep)
 from .spec import (ACCEL_ALGOS, HOST_ALGOS, KINDS, SERVING_POLICIES,
                    SYNTHETIC, SweepSpec, WorkItem, envelope_for, materialize,
                    variant_key)
@@ -25,7 +25,7 @@ __all__ = [
     "ACCEL_ALGOS", "HOST_ALGOS", "KINDS", "SERVING_POLICIES", "SYNTHETIC",
     "SweepStore",
     "SweepResult", "run_sweep", "auto_chunk_size", "bytes_per_item",
-    "HOST_PARITY_ATOL",
+    "HOST_PARITY_ATOL", "SERVING_METRIC_NAMES",
     "summarize", "table", "ratio_frame", "fig3_table", "fig4_table",
     "frontier_table",
 ]

@@ -19,6 +19,11 @@ Examples::
         --seeds 0:8 --override switching_cost=0 --override \\
         switching_cost=2 --override stickiness=3
 
+    # same grid drained by 4 forked local workers through repro.fleet
+    # (plan -> claim/execute/merge), then aggregated from the store
+    python -m repro.sweeps --kind serving --scenario flash_crowd \\
+        --seeds 0:8 --override switching_cost=0 --fleet 4
+
 Interrupting a stored run and re-invoking the same command resumes it:
 completed chunks are read back from the manifest, not recomputed.
 """
@@ -26,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import shutil
 import sys
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
@@ -36,7 +42,7 @@ from .aggregate import summarize, table
 from .shard import DEFAULT_MEMORY_BUDGET_MB, HOST_PARITY_ATOL, run_sweep
 from .spec import KINDS, SweepSpec
 
-__all__ = ["main", "parse_seeds", "build_spec"]
+__all__ = ["main", "parse_seeds", "build_spec", "add_spec_arguments"]
 
 _DEFAULT_STORE_ROOT = Path("experiments") / "sweeps"
 
@@ -76,7 +82,40 @@ def _split_csv(values: List[str]) -> List[str]:
     return out
 
 
+def add_spec_arguments(ap: argparse.ArgumentParser) -> None:
+    """The sweep-grid flags shared by ``repro.sweeps`` and the
+    ``repro.fleet plan`` coordinator (one --override grammar everywhere)."""
+    ap.add_argument("--scenario", action="append", required=True,
+                    help="scenario name(s); repeat or comma-separate "
+                         "(registered scenarios or 'synthetic')")
+    ap.add_argument("--kind", choices=list(KINDS), default="sigma",
+                    help="sigma: analytic objective (default); serving: "
+                         "realized QoS through the full serving engine "
+                         "(algos become queue policies edf/fcfs, or "
+                         "'feedback' for the closed-loop repro.tuning "
+                         "placer; --override also accepts switching_cost, "
+                         "stickiness, max_batch, ...)")
+    ap.add_argument("--seeds", type=parse_seeds, default=(0,),
+                    help="'a:b' range or comma list (default: 0)")
+    ap.add_argument("--ticks", type=int, default=None,
+                    help="horizon length (default: scenario's n_ticks)")
+    ap.add_argument("--algos", action="append", default=None,
+                    help="algorithms to sweep (default: egp; serving "
+                         "kind: edf,fcfs)")
+    ap.add_argument("--override", action="append", metavar="K=V",
+                    help="scenario/instance-size override; repeating the "
+                         "same key forms a grid axis")
+    ap.add_argument("--force-host", action="append", default=None,
+                    help="run these accel-capable algos on the host path")
+    ap.add_argument("--max-iters", type=int, default=512,
+                    help="accelerator greedy-loop iteration cap (part of "
+                         "every work-item hash)")
+
+
 def build_spec(args: argparse.Namespace) -> SweepSpec:
+    if args.algos is None:
+        # serving kind sweeps queue policies, not placement algorithms
+        args.algos = ["edf", "fcfs"] if args.kind == "serving" else ["egp"]
     overrides = [_parse_override(o) for o in (args.override or [])]
     # repeated overrides of the same key form a grid axis; distinct keys
     # combine into every grid point
@@ -120,35 +159,65 @@ def _validate(spec: SweepSpec, result) -> float:
     return worst
 
 
+def _run_fleet(spec: SweepSpec, store_dir: Path, n_workers: int, *,
+               memory_budget_mb: float, quiet: bool) -> None:
+    """The ``--fleet N`` convenience path: plan under ``<store>/fleet``,
+    fork N local workers, wait, reap stragglers, merge into the store.
+    The subsequent ``run_sweep`` call resumes from the merged store —
+    normally a pure read, and the single-process safety net for any chunk
+    a crashed worker left behind.
+
+    The fleet root is keyed by the spec *fingerprint*: the store is
+    deliberately shared across ``--seeds``/``--ticks`` extensions (that
+    is what makes them resume), but one queue serves one exact spec — an
+    extended grid plans a fresh queue whose already-complete seeds are
+    skipped against the shared store."""
+    from repro.fleet.coordinator import merge, plan, reap
+    from repro.fleet.worker import spawn_local_workers
+
+    fleet_root = store_dir / "fleet" / spec.fingerprint()
+    pl = plan(spec, fleet_root, target_store=store_dir)
+    if not quiet:
+        print(f"[fleet] planned {pl['n_tasks']} task(s) "
+              f"({pl['n_items']} item(s), {pl['skipped_items']} already "
+              f"stored) under {fleet_root}")
+    if pl["n_tasks"] or pl["skipped_tasks"]:
+        procs = spawn_local_workers(fleet_root, n_workers, quiet=quiet,
+                                    silence=quiet,
+                                    memory_budget_mb=memory_budget_mb)
+        rcs = [p.wait() for p in procs]
+        if any(rcs) and not quiet:
+            print(f"[fleet] worker exit codes {rcs} — the final "
+                  f"single-process pass will cover any gap",
+                  file=sys.stderr)
+        reap(fleet_root)
+        mg = merge(fleet_root, store_dir)
+        if not quiet:
+            print(f"[fleet] merged {mg['merged_items']} item(s) from "
+                  f"{len(mg['workers'])} worker store(s) "
+                  f"({mg['duplicate_items']} duplicate(s) verified "
+                  f"bit-for-bit); store now holds "
+                  f"{mg['target_items']} item(s)")
+        if mg.get("missing_items") == 0:
+            # everything is in the merged store: the fleet root (queue +
+            # a second copy of every result shard in the worker stores)
+            # is redundant — prune it so resume-with-extended-seeds runs
+            # don't accumulate fingerprint-keyed roots of duplicate data.
+            # A partial merge keeps the root: it IS the recovery state.
+            shutil.rmtree(fleet_root, ignore_errors=True)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.sweeps",
         description="Device-sharded, resumable Monte-Carlo sweeps over the "
                     "PIES scenario registry.")
-    ap.add_argument("--scenario", action="append", required=True,
-                    help="scenario name(s); repeat or comma-separate "
-                         "(registered scenarios or 'synthetic')")
-    ap.add_argument("--kind", choices=list(KINDS), default="sigma",
-                    help="sigma: analytic objective (default); serving: "
-                         "realized QoS through the full serving engine "
-                         "(algos become queue policies edf/fcfs, or "
-                         "'feedback' for the closed-loop repro.tuning "
-                         "placer; --override also accepts switching_cost, "
-                         "stickiness, max_batch, ...)")
-    ap.add_argument("--seeds", type=parse_seeds, default=(0,),
-                    help="'a:b' range or comma list (default: 0)")
-    ap.add_argument("--ticks", type=int, default=None,
-                    help="horizon length (default: scenario's n_ticks)")
-    ap.add_argument("--algos", action="append", default=None,
-                    help="algorithms to sweep (default: egp)")
-    ap.add_argument("--override", action="append", metavar="K=V",
-                    help="scenario/instance-size override; repeating the "
-                         "same key forms a grid axis")
-    ap.add_argument("--force-host", action="append", default=None,
-                    help="run these accel-capable algos on the host path")
-    ap.add_argument("--max-iters", type=int, default=512,
-                    help="accelerator greedy-loop iteration cap (part of "
-                         "every work-item hash)")
+    add_spec_arguments(ap)
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="drain the sweep with N forked local worker "
+                         "processes through repro.fleet (plan -> workers "
+                         "-> crash-safe merge) before aggregating; "
+                         "requires a store")
     ap.add_argument("--out", default=None,
                     help="store directory (default: experiments/sweeps/"
                          "<store-key>, stable across --seeds/--ticks "
@@ -172,9 +241,6 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="write the aggregate summary as JSON")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
-    if args.algos is None:
-        # serving kind sweeps queue policies, not placement algorithms
-        args.algos = ["edf", "fcfs"] if args.kind == "serving" else ["egp"]
     if args.kind == "serving" and args.validate:
         ap.error("--validate compares the batched accelerator path against "
                  "the NumPy host path; kind='serving' has neither")
@@ -186,6 +252,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         # --ticks reuses the same store and resumes instead of recomputing
         store_dir = Path(args.out) if args.out else \
             _DEFAULT_STORE_ROOT / spec.store_key()
+
+    if args.fleet and args.fleet > 0:
+        if store_dir is None:
+            ap.error("--fleet dispatches through a shared store; drop "
+                     "--no-store")
+        _run_fleet(spec, store_dir, args.fleet,
+                   memory_budget_mb=args.memory_budget_mb,
+                   quiet=args.quiet)
 
     result = run_sweep(spec, store_dir=store_dir,
                        chunk_size=args.chunk_size,

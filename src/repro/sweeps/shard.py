@@ -39,6 +39,7 @@ from .spec import SweepSpec, WorkItem, envelope_for, materialize, variant_key
 from .store import SweepStore
 
 __all__ = [
+    "SERVING_METRIC_NAMES",
     "SweepResult",
     "auto_chunk_size",
     "bytes_per_item",
@@ -216,9 +217,18 @@ def _host_value(inst, algo: str, seed: int, tick: int) -> Tuple[float, float]:
 # Serving path (kind="serving": realized QoS through the full engine)
 # ===========================================================================
 
-def _serving_tick_values(scenario: str, overrides, policy: str, seed: int,
-                         n_ticks: int) -> np.ndarray:
-    """Per-tick mean realized QoS of one seed's horizon.
+#: Per-item metric arrays persisted for ``kind="serving"`` chunks (store
+#: schema v3): per-tick request counts plus mean latency/accuracy of the
+#: tick's served requests — exactly what :mod:`repro.tuning.pareto` needs
+#: to reconstruct horizon-level miss-rate / latency / accuracy frontiers
+#: as a pure store read (no horizon replay).
+SERVING_METRIC_NAMES = ("submitted", "served", "misses", "latency",
+                        "accuracy")
+
+
+def _serving_horizon(scenario: str, overrides, policy: str, seed: int,
+                     n_ticks: int):
+    """One seed's full :class:`~repro.serving.horizon.HorizonResult`.
 
     One call drives the whole placement → routing → continuous-batching
     pipeline (:func:`repro.serving.horizon.run_horizon`); the scheduler is
@@ -231,7 +241,21 @@ def _serving_tick_values(scenario: str, overrides, policy: str, seed: int,
 
     cfg = HorizonConfig.from_overrides(scenario, dict(overrides), policy,
                                        seed, n_ticks=n_ticks)
-    return run_horizon(cfg).tick_values()
+    return run_horizon(cfg)
+
+
+def _serving_metrics(per_tick, ticks: Sequence[int]
+                     ) -> Dict[str, np.ndarray]:
+    """The :data:`SERVING_METRIC_NAMES` rows for the given tick items."""
+    by_name = {
+        "submitted": [per_tick[t].submitted for t in ticks],
+        "served": [per_tick[t].served for t in ticks],
+        "misses": [per_tick[t].deadline_misses for t in ticks],
+        "latency": [per_tick[t].mean_latency_s for t in ticks],
+        "accuracy": [per_tick[t].mean_accuracy for t in ticks],
+    }
+    return {name: np.asarray(by_name[name], np.float64)
+            for name in SERVING_METRIC_NAMES}
 
 
 # ===========================================================================
@@ -345,11 +369,11 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
                     stopped = True
                     break
                 t0 = time.perf_counter()
-                tick_vals = _serving_tick_values(scenario, overrides, algo,
-                                                 seed, T)
+                res = _serving_horizon(scenario, overrides, algo, seed, T)
                 wall = time.perf_counter() - t0
                 chunk_keys = [k for _, k in chunk]
-                vals = tick_vals[[it.tick for it, _ in chunk]]
+                chunk_ticks = [it.tick for it, _ in chunk]
+                vals = res.tick_values()[chunk_ticks]
                 times = np.full(len(chunk), wall / len(chunk))
                 paths.add("serving")
                 meta = {"scenario": scenario, "overrides": dict(overrides),
@@ -359,7 +383,9 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
                         "n_devices": 1, "wall_s": round(wall, 6),
                         "B": len(chunk)}
                 if store is not None:
-                    store.add_chunk(chunk_keys, vals, times, meta)
+                    store.add_chunk(chunk_keys, vals, times, meta,
+                                    metrics=_serving_metrics(res.per_tick,
+                                                             chunk_ticks))
                 for k, v, dt in zip(chunk_keys, vals, times):
                     memory[k] = (float(v), float(dt))
                 computed += 1

@@ -57,7 +57,12 @@ __all__ = [
 #: values. Table refreshes need no bump: the resolved knobs are baked
 #: into every serving item's overrides at expansion, so its keys change
 #: by themselves (see SweepSpec._resolve_serving_knobs).
-SCHEMA_VERSION = 2
+#: v3: serving items persist per-item serving metrics (submitted/served/
+#: misses/latency/accuracy) alongside QoS, and ``repro.tuning.pareto``
+#: reads frontiers straight from the store — a store without metrics must
+#: recompute rather than silently mix metric-less items into frontier
+#: extraction, so the bump re-keys every serving item.
+SCHEMA_VERSION = 3
 
 #: Algorithms with a batched accelerator implementation (vmap / shard_map).
 ACCEL_ALGOS = ("egp", "agp")
@@ -344,6 +349,31 @@ class SweepSpec:
             "schema_version": SCHEMA_VERSION,
             "fingerprint": self.fingerprint(),
         }
+
+    @classmethod
+    def from_json(cls, doc: Mapping[str, Any]) -> "SweepSpec":
+        """Reconstruct a spec from :meth:`to_json` output — the queue
+        export ``repro.fleet`` ships to workers. A document written under
+        a different engine schema version is rejected: its item keys would
+        silently never match this engine's, and a fleet must fail loudly
+        on version skew rather than recompute everything into limbo."""
+        have = int(doc.get("schema_version", SCHEMA_VERSION))
+        if have != SCHEMA_VERSION:
+            raise ValueError(
+                f"spec document has sweep schema v{have}, this engine is "
+                f"v{SCHEMA_VERSION} — re-plan the fleet with the current "
+                f"code (item keys are schema-versioned)")
+        return cls(
+            scenarios=tuple(doc.get("scenarios", ("steady",))),
+            seeds=tuple(doc.get("seeds", (0,))),
+            n_ticks=doc.get("n_ticks"),
+            algos=tuple(doc.get("algos", ("egp",))),
+            override_grid=tuple(_canon_overrides(ov)
+                                for ov in doc.get("override_grid", [{}])),
+            force_host=tuple(doc.get("force_host", ())),
+            max_iters=doc.get("max_iters", 512),
+            kind=doc.get("kind", "sigma"),
+        )
 
 
 # ===========================================================================

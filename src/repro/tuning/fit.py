@@ -78,6 +78,7 @@ class ServingRecord:
     value: float               # per-(seed, tick) mean realized QoS
     overrides: Tuple[Tuple[str, Any], ...] = ()   # full stored override set
     horizon: int = 0           # run's tick count (0: unknown, older store)
+    key: str = ""              # the item's store key (metrics lookup)
 
 
 def read_serving_records(store: "SweepStore | os.PathLike | str"
@@ -111,6 +112,7 @@ def read_serving_records(store: "SweepStore | os.PathLike | str"
             value=store.value(key),
             overrides=tuple(sorted(ov.items())),
             horizon=int(meta.get("horizon", 0)),
+            key=key,
         ))
     if n_serving == 0:
         raise ValueError(

@@ -26,9 +26,16 @@ The dominance check itself is a batched ``O(N²·M)`` tensor comparison:
   reassociate).
 
 Point metrics beyond the stored mean QoS (miss rate, latency, served
-accuracy) are recovered by *replaying* each grid point's horizon —
-``run_horizon`` is a pure function of ``(config, seed)``, so the replay
-is byte-identical to the run that filled the store.
+accuracy) come **straight from the store**: schema-v3 serving sweeps
+persist per-item ``submitted``/``served``/``misses``/``latency``/
+``accuracy`` arrays at sweep time (see
+:data:`repro.sweeps.shard.SERVING_METRIC_NAMES`), and
+:func:`frontier_points` reconstructs the horizon-level metrics from them
+as a pure store read — zero horizon replays. Only *legacy* stores
+(written before schema v3, or with partially stored seeds) fall back to
+replaying each grid point's horizon — ``run_horizon`` is a pure function
+of ``(config, seed)``, so the replay is byte-identical to the run that
+filled the store.
 """
 from __future__ import annotations
 
@@ -150,25 +157,107 @@ class FrontierPoint:
     acc_lat_frontier: bool = False  # non-dominated in (acc ↑, latency ↓)
 
 
+#: Per-item metric names a schema-v3 cell must hold for the pure-store
+#: path; anything less falls back to horizon replay.
+_REQUIRED_METRICS = frozenset(
+    {"submitted", "served", "misses", "latency", "accuracy"})
+
+
+def _seed_reduce(qos, miss, lat, acc) -> Dict[str, float]:
+    """Per-seed metric lists → the cell's FrontierPoint metric dict."""
+    return {"mean_qos": float(np.mean(qos)),
+            "miss_rate": float(np.mean(miss)),
+            "mean_latency_s": float(np.mean(lat)) if lat else float("nan"),
+            "mean_accuracy": float(np.mean(acc)) if acc else float("nan")}
+
+
+def _accumulate_seed(a: Dict[str, np.ndarray],
+                     qos: list, miss: list, lat: list, acc: list) -> None:
+    """Fold one seed's per-tick arrays into the per-seed metric lists.
+
+    The *single* reduction both metric sources share: the store path feeds
+    it the persisted per-item arrays, the replay path feeds it the same
+    numbers straight from the ``TickReport``\\ s — so the two paths are
+    bit-identical, and frontier flags never flip between them on exact
+    metric ties. Per seed: submission-weighted mean QoS, misses over
+    served, and served-weighted latency/accuracy means over the ticks
+    that served anything (a seed that served nothing contributes to
+    QoS/miss but not to latency/accuracy).
+    """
+    n_sub, n_served = a["submitted"].sum(), a["served"].sum()
+    qos.append(float((a["values"] * a["submitted"]).sum() / n_sub)
+               if n_sub else 0.0)
+    miss.append(float(a["misses"].sum() / n_served) if n_served else 0.0)
+    if n_served:
+        hot = a["served"] > 0  # ticks that served nothing carry NaN means
+        lat.append(float((a["latency"][hot] * a["served"][hot]).sum()
+                         / n_served))
+        acc.append(float((a["accuracy"][hot] * a["served"][hot]).sum()
+                         / n_served))
+
+
 def _replay_metrics(scenario: str, overrides: Tuple[Tuple[str, Any], ...],
                     policy: str, seeds: Sequence[int],
                     n_ticks: int) -> Dict[str, float]:
+    """Legacy fallback: replay each seed's horizon for the metrics a
+    pre-v3 store does not hold, reduced through the same arithmetic as
+    the store path (replay is byte-identical to the original run, so the
+    two paths agree bit-for-bit on complete stores)."""
     qos, miss, lat, acc = [], [], [], []
     for seed in seeds:
         cfg = HorizonConfig.from_overrides(scenario, dict(overrides), policy,
                                            seed, n_ticks=n_ticks)
         res = run_horizon(cfg)
-        qos.append(res.mean_realized_qos)
-        miss.append(res.miss_rate)
-        if res.requests:
-            lats = np.maximum(
-                [r.finish - r.arrival for r in res.requests], 0.0)
-            lat.append(float(np.mean(lats)))
-            acc.append(float(np.mean([r.accuracy for r in res.requests])))
-    return {"mean_qos": float(np.mean(qos)),
-            "miss_rate": float(np.mean(miss)),
-            "mean_latency_s": float(np.mean(lat)) if lat else float("nan"),
-            "mean_accuracy": float(np.mean(acc)) if acc else float("nan")}
+        pt = res.per_tick
+        _accumulate_seed({
+            "values": res.tick_values(),
+            "submitted": np.array([t.submitted for t in pt], np.float64),
+            "served": np.array([t.served for t in pt], np.float64),
+            "misses": np.array([t.deadline_misses for t in pt], np.float64),
+            "latency": np.array([t.mean_latency_s for t in pt], np.float64),
+            "accuracy": np.array([t.mean_accuracy for t in pt], np.float64),
+        }, qos, miss, lat, acc)
+    return _seed_reduce(qos, miss, lat, acc)
+
+
+def _store_metrics(store: SweepStore, records: Sequence[ServingRecord],
+                   n_ticks: int) -> Optional[Dict[str, float]]:
+    """Horizon-level metrics reconstructed purely from stored per-item
+    arrays — or None when the cell cannot support it (pre-v3 chunks
+    without metrics, unknown horizon, or a seed with missing ticks) and
+    the caller must replay.
+
+    Mirrors :func:`_replay_metrics` exactly: per seed, mean QoS is the
+    submission-weighted mean of per-tick values, miss rate is total
+    misses over total served, and latency/accuracy are served-weighted
+    means over the ticks that served anything (seeds that served nothing
+    contribute to QoS/miss but not to latency/accuracy, like a replay
+    with an empty ``res.requests``).
+    """
+    if n_ticks <= 0:
+        return None
+    by_seed: Dict[int, List[ServingRecord]] = {}
+    for r in records:
+        by_seed.setdefault(r.seed, []).append(r)
+    qos, miss, lat, acc = [], [], [], []
+    for seed in sorted(by_seed):
+        recs = by_seed[seed]
+        if len(recs) != n_ticks:
+            return None  # partially stored seed: not reconstructible
+        a = {name: np.zeros(len(recs))
+             for name in ("values", "submitted", "served", "misses",
+                          "latency", "accuracy")}
+        for i, r in enumerate(recs):
+            if not r.key:
+                return None
+            m = store.metrics(r.key)
+            if not _REQUIRED_METRICS <= m.keys():
+                return None  # legacy chunk without per-item metrics
+            a["values"][i] = r.value
+            for name in _REQUIRED_METRICS:
+                a[name][i] = m[name]
+        _accumulate_seed(a, qos, miss, lat, acc)
+    return _seed_reduce(qos, miss, lat, acc)
 
 
 def _resolve_horizon(store_root: Path, scenario: str,
@@ -191,39 +280,38 @@ def frontier_points(store: "SweepStore | str", *,
                     use_jax: bool = False) -> Dict[str, List[FrontierPoint]]:
     """Per-scenario operating points with both frontier flags set.
 
-    Walks every stored serving grid point (explicit knobs), replays its
-    horizon per stored seed for the metrics the store does not hold, and
-    marks non-domination in the (QoS, miss-rate) and (accuracy, latency)
-    planes — ``use_jax=True`` routes the dominance check through the
-    batched on-device path.
+    Walks every stored serving grid point (explicit knobs), reconstructs
+    its miss-rate/latency/accuracy metrics **from the stored per-item
+    metric arrays** (schema v3 — a pure store read, zero horizon
+    replays), and marks non-domination in the (QoS, miss-rate) and
+    (accuracy, latency) planes — ``use_jax=True`` routes the dominance
+    check through the batched on-device path. Cells a legacy (pre-v3)
+    store cannot reconstruct fall back to deterministic horizon replay.
     """
     if not isinstance(store, SweepStore):
         store = SweepStore(store)
     records = read_serving_records(store)
     mask_fn = pareto_mask_jax if use_jax else pareto_mask_np
 
-    #: (scenario, overrides, policy) -> {"seeds": set, "horizon": int}
-    cells: Dict[Tuple[str, Tuple, str], Dict[str, Any]] = {}
+    #: (scenario, overrides, policy) -> that cell's records
+    cells: Dict[Tuple[str, Tuple, str], List[ServingRecord]] = {}
     for r in records:
         if scenarios is not None and r.scenario not in scenarios:
             continue
-        cell = cells.setdefault((r.scenario, r.overrides, r.policy),
-                                {"seeds": set(), "horizon": r.horizon,
-                                 "rec": r})
-        cell["seeds"].add(r.seed)
-        cell["horizon"] = max(cell["horizon"], r.horizon)
+        cells.setdefault((r.scenario, r.overrides, r.policy), []).append(r)
 
     out: Dict[str, List[FrontierPoint]] = {}
-    for (scenario, overrides, policy), cell in sorted(
+    for (scenario, overrides, policy), recs in sorted(
             cells.items(), key=lambda kv: (kv[0][0], kv[0][1], kv[0][2])):
-        T = cell["horizon"] or _resolve_horizon(Path(store.root), scenario,
-                                                overrides)
-        seeds = sorted(cell["seeds"])
-        m = _replay_metrics(scenario, overrides, policy, seeds, T)
-        rec: ServingRecord = cell["rec"]
+        T = max(r.horizon for r in recs) or \
+            _resolve_horizon(Path(store.root), scenario, overrides)
+        seeds = sorted({r.seed for r in recs})
+        m = _store_metrics(store, recs, T)
+        if m is None:  # legacy store without per-item metrics
+            m = _replay_metrics(scenario, overrides, policy, seeds, T)
         out.setdefault(scenario, []).append(FrontierPoint(
-            scenario=scenario, switching_cost=rec.switching_cost,
-            stickiness=rec.stickiness, policy=policy,
+            scenario=scenario, switching_cost=recs[0].switching_cost,
+            stickiness=recs[0].stickiness, policy=policy,
             n_seeds=len(seeds), **m))
 
     def _keep(plane: np.ndarray) -> np.ndarray:

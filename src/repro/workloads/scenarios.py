@@ -16,9 +16,11 @@ dynamics, and an optional edge-failure schedule into a pure generator of
   surviving edge on the ring, exactly the paper's service-level recovery.
 
 Registered scenarios (``list_scenarios()``): ``steady``, ``diurnal``,
-``flash_crowd``, ``mobility_churn``, ``edge_failure``, ``trace_replay``
-and ``trace_replay_bursty`` (the bundled real-world-style day and bursty
-weekend traces under ``examples/data/``).
+``flash_crowd``, ``mobility_churn``, ``edge_failure``, ``trace_replay``,
+``trace_replay_bursty`` (the bundled real-world-style day and bursty
+weekend traces under ``examples/data/``) and ``trace_replay_azure`` (a
+genuinely external trace: an Azure-Functions-style per-interval
+invocation excerpt, unit-normalized onto the edge slot pool).
 """
 from __future__ import annotations
 
@@ -335,6 +337,28 @@ def _bundled_weekend_trace() -> TraceArrivals:
                           _FALLBACK_WEEKEND_TRACE)
 
 
+#: The Azure excerpt's per-tick counts after the loader's unit
+#: normalization (60-minute buckets, mean 42/tick) — the fallback must
+#: equal the processed file exactly so a partial checkout degrades to
+#: identical counts (see _bundled_trace).
+_AZURE_TARGET_MEAN = 42.0
+_FALLBACK_AZURE_TRACE = (
+    14, 11, 10, 11, 14, 18, 24, 33, 39, 47, 53, 59,
+    55, 63, 67, 69, 66, 61, 55, 48, 40, 33, 25, 19,
+    15, 12, 11, 11, 15, 20, 27, 34, 42, 51, 59, 60,
+    59, 67, 75, 74, 72, 68, 71, 94, 59, 36, 28, 21)
+
+
+def _bundled_azure_trace() -> TraceArrivals:
+    path = Path(__file__).resolve().parents[3] / "examples" / "data" / \
+        "azure_function_excerpt.csv"
+    try:
+        return TraceArrivals.from_azure_csv(
+            path, minutes_per_tick=60, target_mean=_AZURE_TARGET_MEAN)
+    except (OSError, ValueError):
+        return TraceArrivals(counts=_FALLBACK_AZURE_TRACE)
+
+
 @register_scenario
 def trace_replay() -> Scenario:
     """Replay the bundled real-world-style day trace, tick = one hour."""
@@ -367,6 +391,26 @@ def trace_replay_bursty() -> Scenario:
                     "events jump ≥30 requests hour-over-hour while the "
                     "popularity head drifts — the second real trace, and "
                     "the bursty counterpoint the auto-tuner fits against.",
+    )
+
+
+@register_scenario
+def trace_replay_azure() -> Scenario:
+    """Replay the Azure-Functions-style excerpt, tick = one hour."""
+    return Scenario(
+        name="trace_replay_azure",
+        arrivals=_bundled_azure_trace(),
+        popularity_factory=lambda s: ZipfPopularity(
+            s, exponent=1.1, drift_period=8, drift_step=2),
+        churn=ChurnModel(lifetime=12),
+        n_ticks=48,
+        description="48-hour replay of an external Azure-Functions-style "
+                    "per-interval invocation trace (examples/data/"
+                    "azure_function_excerpt.csv), aggregated into hourly "
+                    "ticks and mean-normalized onto the slot pool: "
+                    "workday diurnal cycle, lunchtime dip, and a day-2 "
+                    "evening flash event — the first genuinely external "
+                    "public-trace workload, for fleet-scale sweeps.",
     )
 
 

@@ -42,8 +42,9 @@ def test_work_item_keys_are_schema_stable():
     key = spec.expand()[0].key()
     assert key == spec.expand()[0].key()
     assert len(key) == 24 and int(key, 16) >= 0
-    # v2: serving requeue + tuning-table knob resolution (see spec.py)
-    assert key == "20d10f7a4fd1283792265c94"
+    # v3: per-item serving metrics persisted at sweep time; pareto reads
+    # frontiers from the store (see spec.py)
+    assert key == "3cc25f098c2b9bfc3e36fb45"
     # a different accelerator iteration cap is a different result
     capped = SweepSpec(scenarios=("steady",), seeds=(0,), n_ticks=1,
                        max_iters=8)
@@ -159,6 +160,63 @@ def test_store_append_after_torn_line_does_not_glue(tmp_path):
     # the new record starts on a fresh line: both chunks visible on reload
     final = SweepStore(tmp_path)
     assert "k1" in final and "k2" in final and final.value("k2") == 2.0
+
+
+def test_store_concurrent_handles_never_clobber(tmp_path):
+    """Two live handles on one store (fleet workers sharing a directory):
+    each append re-reads the manifest under the lock, so a stale handle
+    keeps the other writer's lines instead of clobbering them."""
+    a = SweepStore(tmp_path)
+    b = SweepStore(tmp_path)          # opened before a writes: stale view
+    a.add_chunk(["k1"], np.array([1.0]), np.array([0.1]))
+    assert "k1" not in b              # stale in memory...
+    b.add_chunk(["k2"], np.array([2.0]), np.array([0.2]))
+    assert "k1" in b and b.value("k1") == 1.0  # ...refreshed under lock
+    fresh = SweepStore(tmp_path)
+    assert "k1" in fresh and "k2" in fresh
+    assert fresh.value("k1") == 1.0 and fresh.value("k2") == 2.0
+    assert len((tmp_path / "manifest.jsonl").read_text().splitlines()) == 2
+
+
+def test_store_metrics_roundtrip_and_chunk_hooks(tmp_path):
+    store = SweepStore(tmp_path)
+    store.add_chunk(["k1", "k2"], np.array([1.0, 2.0]),
+                    np.array([0.1, 0.2]), {"algo": "edf"},
+                    metrics={"served": [5.0, 6.0],
+                             "latency": [0.25, float("nan")]})
+    store.add_chunk(["k3"], np.array([3.0]), np.array([0.3]))
+    again = SweepStore(tmp_path)
+    assert again.metrics("k1") == {"served": 5.0, "latency": 0.25}
+    m2 = again.metrics("k2")
+    assert m2["served"] == 6.0 and np.isnan(m2["latency"])
+    assert again.metrics("k3") == {}  # chunk without metrics
+    # chunk-granular hooks (the fleet merge path)
+    recs = again.chunks()
+    assert [r["keys"] for r in recs] == [["k1", "k2"], ["k3"]]
+    assert recs[0]["metrics"] == ["latency", "served"]
+    data = again.chunk_data(recs[0]["shard"])
+    np.testing.assert_array_equal(data["values"], [1.0, 2.0])
+    np.testing.assert_array_equal(data["metric_served"], [5.0, 6.0])
+    with pytest.raises(AssertionError):
+        store.add_chunk(["k4"], np.array([1.0]), np.array([0.1]),
+                        metrics={"served": [1.0, 2.0]})  # wrong length
+
+
+def test_spec_json_roundtrip_and_schema_guard():
+    spec = SweepSpec(scenarios=("steady", "flash_crowd"), seeds=(0, 3),
+                     n_ticks=2, algos=("egp", "sck"),
+                     override_grid=({"n_user_slots": 32},),
+                     force_host=("egp",), max_iters=64)
+    back = SweepSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.fingerprint() == spec.fingerprint()
+    assert [i.key() for i in back.expand()] == \
+        [i.key() for i in spec.expand()]
+    # version skew must fail loudly, not silently re-key every item
+    doc = spec.to_json()
+    doc["schema_version"] -= 1
+    with pytest.raises(ValueError, match="schema"):
+        SweepSpec.from_json(doc)
 
 
 def test_store_key_is_stable_across_seed_and_tick_extension():

@@ -33,7 +33,8 @@ ALL_SCENARIOS = list_scenarios()
 def test_registry_has_the_registered_scenarios():
     assert set(ALL_SCENARIOS) == {"steady", "diurnal", "flash_crowd",
                                   "mobility_churn", "edge_failure",
-                                  "trace_replay", "trace_replay_bursty"}
+                                  "trace_replay", "trace_replay_bursty",
+                                  "trace_replay_azure"}
 
 
 def test_trace_arrivals_from_file(tmp_path):
@@ -69,6 +70,51 @@ def test_trace_replay_bursty_scenario_is_bursty():
     assert int(np.abs(np.diff(counts)).max()) >= 30
     day = np.array(get_scenario("trace_replay").arrivals.counts)
     assert np.abs(np.diff(counts)).max() > np.abs(np.diff(day)).max()
+
+
+def test_trace_arrivals_from_azure_csv(tmp_path):
+    p = tmp_path / "azure.csv"
+    # header + 10-minute aggregates; comment and malformed rows skipped
+    p.write_text("interval_start_minute,total_invocations\n"
+                 "# platform-scale counts\n"
+                 "0,600000\n10,300000\n50,300000\n"
+                 "60,1200000\n70,1200000\n"
+                 "120,2400000\n")
+    tr = TraceArrivals.from_azure_csv(p, minutes_per_tick=60)
+    # time normalization: minutes bucket into hourly ticks
+    assert tr.counts == (1_200_000, 2_400_000, 2_400_000)
+    # scale normalization: mean per-tick count rescaled, shape preserved
+    norm = TraceArrivals.from_azure_csv(p, minutes_per_tick=60,
+                                        target_mean=40.0)
+    assert norm.counts == (24, 48, 48)
+    assert np.mean(norm.counts) == 40.0
+    import pytest as _pytest
+    empty = tmp_path / "empty.csv"
+    empty.write_text("interval_start_minute,total_invocations\n")
+    with _pytest.raises(ValueError):
+        TraceArrivals.from_azure_csv(empty)
+    # a clock-skewed negative interval must raise, not silently fold
+    # into the last tick through negative indexing
+    skewed = tmp_path / "skewed.csv"
+    skewed.write_text("minute,count\n-10,50000\n0,100\n")
+    with _pytest.raises(ValueError, match="negative interval"):
+        TraceArrivals.from_azure_csv(skewed)
+
+
+def test_trace_replay_azure_scenario_replays_external_trace():
+    from repro.workloads.scenarios import _FALLBACK_AZURE_TRACE
+    sc = get_scenario("trace_replay_azure")
+    assert isinstance(sc.arrivals, TraceArrivals)
+    assert sc.n_ticks == 48 and len(sc.arrivals.counts) == 48
+    counts = [sc.active_users_at(3, t) for t in range(48)]
+    assert counts == list(sc.arrivals.counts)  # exact replay, no clipping
+    # the normalized trace fits the slot pool (no truncation at the peak)
+    assert max(counts) <= sc.n_user_slots
+    # the bundled file and the built-in fallback agree exactly, so a
+    # partial checkout degrades to identical traffic
+    assert tuple(sc.arrivals.counts) == _FALLBACK_AZURE_TRACE
+    # day-2 evening flash event: sharper jump than the smooth day trace
+    assert int(np.abs(np.diff(counts)).max()) >= 20
 
 
 @pytest.mark.parametrize("name", ALL_SCENARIOS)
