@@ -33,6 +33,31 @@ def run(verbose: bool = True):
     rows.append(("qos_matrix_numpy", t_np, f"{UP/t_np:.0f} pairs/us"))
     rows.append(("qos_matrix_jnp_jit", t_jnp, f"{UP/t_jnp:.0f} pairs/us"))
 
+    # --- qos matrix Pallas dispatcher, timed via repro.obs span durations ---
+    # block_until_ready inside the span: JAX dispatch is async, so the
+    # ops-level kernel.qos_matrix span alone covers dispatch, not compute
+    from repro import obs
+    from repro.obs import trace as _obs_trace
+    from repro.kernels.qos_matrix.ops import qos_matrix_from_instance
+    small = synthetic_instance(256, seed=0)
+    sji = small.as_jax()
+    prev = obs.get_tracer()
+    tr = obs.enable(capacity=256)
+    try:
+        for _ in range(2):  # warmup (first call pays the XLA compile)
+            jax.block_until_ready(qos_matrix_from_instance(sji))
+        for _ in range(5):
+            with obs.span("bench.qos_matrix_pallas"):
+                jax.block_until_ready(qos_matrix_from_instance(sji))
+        durs = tr.span_durations_s("bench.qos_matrix_pallas")
+        t_k = float(np.mean(durs)) * 1e6
+        up_small = small.U * small.P
+        rows.append(("qos_matrix_pallas", t_k,
+                     f"{up_small/t_k:.0f} pairs/us obs-span "
+                     f"(interpret off-TPU)"))
+    finally:
+        _obs_trace._TRACER = prev  # restore whatever tracer the caller had
+
     # --- placement algorithms (paper control plane) -------------------------
     from repro.core import egp_np, agp_np, opt_np, qos_matrix_np as qmn
     Q = qmn(inst)

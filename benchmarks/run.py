@@ -5,7 +5,10 @@
 Prints ``name,us_per_call,derived`` CSV rows. --full uses the paper's trial
 counts (slow); the default is a reduced-but-faithful pass. --json writes
 the same rows as structured JSON (the ``derived`` k=v pairs parsed into
-typed fields), so the BENCH_* perf trajectory can be captured mechanically.
+typed fields) under a versioned schema (:data:`BENCH_SCHEMA_VERSION`),
+plus the repro.obs metric digests (latency/throughput histogram
+summaries) collected while the benchmarks ran — so the BENCH_* perf
+trajectory can be captured mechanically (seed: ``BENCH_baseline.json``).
 """
 from __future__ import annotations
 
@@ -14,6 +17,9 @@ import json
 import sys
 import time
 from pathlib import Path
+
+#: Version stamp of the --json record layout.
+BENCH_SCHEMA_VERSION = 1
 
 
 def _parse_derived(derived: str) -> dict:
@@ -62,6 +68,11 @@ def main() -> None:
 
     emit = _Emitter()
     print("name,us_per_call,derived")
+
+    # one tracer across every benchmark: the instrumented hot paths feed
+    # its histograms (serving latency, sweep throughput) as a side effect
+    from repro import obs
+    tracer = obs.enable()
 
     from benchmarks import fig3_validation, fig4_scale, fig5_realworld
     from benchmarks import kernels_micro, roofline, scenarios
@@ -152,6 +163,13 @@ def main() -> None:
     for name, us, derived in kernels_micro.run(verbose=False):
         emit(f"kernel_{name}", us, derived)
 
+    ov = serving_horizon.obs_overhead()
+    emit("obs_overhead", ov["noop_span_ns"] / 1e3,
+         f"disabled_pct={ov['disabled_pct']:.4f}"
+         f";enabled_pct={ov['enabled_pct']:.2f}"
+         f";events={ov['n_events']}"
+         f";noop_span_ns={ov['noop_span_ns']:.0f}")
+
     rows = roofline.build(verbose=False)
     ok_rows = [r for r in rows if "skip" not in r]
     if ok_rows:
@@ -170,8 +188,17 @@ def main() -> None:
     if args.json:
         path = Path(args.json)
         path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(
-            {"full": bool(args.full), "rows": emit.rows}, indent=1))
+        path.write_text(json.dumps({
+            "bench_schema": BENCH_SCHEMA_VERSION,
+            "full": bool(args.full),
+            "rows": emit.rows,
+            "obs": {
+                "histograms": tracer.metrics.histograms(),
+                "counters": dict(tracer.counters),
+                "n_spans": tracer.n_spans,
+            },
+        }, indent=1))
+    obs.disable()
 
 
 if __name__ == "__main__":

@@ -57,6 +57,8 @@ def _cmd_plan(args: argparse.Namespace) -> int:
 
 
 def _cmd_worker(args: argparse.Namespace) -> int:
+    from repro import obs
+    obs.enable_from_env()  # REPRO_OBS=1 propagated by spawn_local_workers
     summary = run_worker(args.root, owner=args.owner, ttl=args.ttl,
                          max_tasks=args.max_tasks,
                          memory_budget_mb=args.memory_budget_mb,
@@ -76,8 +78,25 @@ def _cmd_status(args: argparse.Namespace) -> int:
              if q.get("poisoned") else "")
           + (f"; spec items: {out['n_spec_items']}"
              if out.get("n_spec_items") is not None else ""))
+    rate = out.get("rate_items_per_s") or 0.0
+    eta = out.get("eta_s")
+    line = (f"[fleet] remaining: {out.get('remaining_items', 0)} item(s)")
+    if rate > 0:
+        line += f" at {rate:.2f} items/s (live workers)"
+    if eta is not None:
+        line += f", ETA {eta:.0f}s"
+    print(line)
+    tele = out.get("telemetry", {})
     for name, n in sorted(out["workers"].items()):
-        print(f"  worker {name:<24} {n:>6d} item(s)")
+        w = tele.get(name)
+        extra = ""
+        if w is not None:
+            extra = (f"  [{w.get('state')}] "
+                     f"{w.get('items_per_s', 0.0):.2f} items/s")
+            wall = w.get("last_task_wall_s")
+            if wall is not None:
+                extra += f", last chunk {wall:.2f}s"
+        print(f"  worker {name:<24} {n:>6d} item(s){extra}")
     if "target_items" in out:
         missing = out.get("target_missing")
         print(f"  target store: {out['target_items']} item(s)"

@@ -42,6 +42,7 @@ from repro.sweeps.spec import SweepSpec
 from repro.sweeps.store import SweepStore, atomic_write
 
 from .queue import DEFAULT_TTL_S, LeaseQueue, Task
+from .telemetry import DEFAULT_STALE_S, read_telemetry
 from .worker import _QUEUE_DIR, _WORKERS_DIR, load_fleet_spec
 
 __all__ = ["FleetMergeConflict", "plan", "status", "merge", "reap",
@@ -142,13 +143,30 @@ def worker_stores(fleet_root) -> List[Path]:
                   or (d / "shards").is_dir())
 
 
-def status(fleet_root, *, target_store=None) -> Dict[str, Any]:
-    """Queue counts, per-worker completed items, target completeness."""
+def status(fleet_root, *, target_store=None,
+           stale_s: float = DEFAULT_STALE_S) -> Dict[str, Any]:
+    """Queue counts, per-worker completed items, target completeness —
+    plus live throughput: ``remaining_items`` (summed over pending and
+    leased task keys), per-worker ``telemetry`` records,
+    ``rate_items_per_s`` (live workers only — telemetry fresher than
+    ``stale_s``), and ``eta_s`` (remaining over rate, ``None`` when no
+    worker is live)."""
     fleet_root = Path(fleet_root)
     queue = LeaseQueue(fleet_root / _QUEUE_DIR, create=False)
     out: Dict[str, Any] = {"queue": queue.status(), "workers": {}}
     for wdir in worker_stores(fleet_root):
         out["workers"][wdir.name] = len(SweepStore(wdir))
+    remaining = 0
+    for name in queue.pending() + queue.leased():
+        task = queue.read_task(name)
+        if task is not None:
+            remaining += len(task.keys)
+    out["remaining_items"] = remaining
+    tele = read_telemetry(fleet_root, stale_s=stale_s)
+    out["telemetry"] = tele["workers"]
+    out["rate_items_per_s"] = tele["rate_items_per_s"]
+    out["eta_s"] = (round(remaining / out["rate_items_per_s"], 3)
+                    if remaining and out["rate_items_per_s"] > 0 else None)
     try:
         spec = load_fleet_spec(fleet_root)
         out["n_spec_items"] = len(spec.expand())

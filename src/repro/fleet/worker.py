@@ -38,6 +38,7 @@ from repro.sweeps.spec import SweepSpec
 from repro.sweeps.shard import run_sweep
 
 from .queue import DEFAULT_TTL_S, Lease, LeaseQueue, Task, default_owner
+from .telemetry import WorkerTelemetry
 
 __all__ = ["task_spec", "run_worker", "spawn_local_workers",
            "worker_store_dir", "load_fleet_spec"]
@@ -139,7 +140,8 @@ def run_worker(fleet_root: os.PathLike | str, *,
 
     try:
         return _worker_loop(queue, spec, store_dir, owner, stop,
-                            max_tasks, memory_budget_mb, verbose)
+                            max_tasks, memory_budget_mb, verbose,
+                            telemetry=WorkerTelemetry(fleet_root, owner))
     finally:
         # an in-process caller (tests, benchmarks) keeps its own Ctrl-C
         for sig, handler in previous_handlers.items():
@@ -150,10 +152,14 @@ def _worker_loop(queue: LeaseQueue, spec: SweepSpec, store_dir: Path,
                  owner: str, stop: Dict[str, Any],
                  max_tasks: Optional[int],
                  memory_budget_mb: Optional[float],
-                 verbose: bool) -> Dict[str, Any]:
+                 verbose: bool,
+                 telemetry: Optional[WorkerTelemetry] = None
+                 ) -> Dict[str, Any]:
     executed: List[str] = []
     items = 0
     t0 = time.perf_counter()
+    if telemetry is not None:
+        telemetry.start()
     while stop["reason"] is None:
         if max_tasks is not None and len(executed) >= max_tasks:
             stop["reason"] = "max_tasks"
@@ -176,6 +182,7 @@ def _worker_loop(queue: LeaseQueue, spec: SweepSpec, store_dir: Path,
                 f"worker; re-plan the fleet")
         hb = _Heartbeat(lease, interval=queue.ttl / 3.0)
         hb.start()
+        task_t0 = time.perf_counter()
         try:
             kwargs = {} if memory_budget_mb is None else \
                 {"memory_budget_mb": memory_budget_mb}
@@ -185,11 +192,16 @@ def _worker_loop(queue: LeaseQueue, spec: SweepSpec, store_dir: Path,
         items += len(task.keys)
         completed = lease.complete()
         executed.append(task.name)
+        if telemetry is not None:
+            telemetry.task_done(task.name, len(task.keys),
+                                time.perf_counter() - task_t0)
         if verbose:
             state = "done" if completed else "done (lease was reaped)"
             print(f"[fleet:{owner}] {task.name}: {len(task.keys)} item(s) "
                   f"{state}", flush=True)
 
+    if telemetry is not None:
+        telemetry.stop(stop["reason"] or "drained")
     summary = {"owner": owner, "tasks": executed, "n_tasks": len(executed),
                "n_items": items, "stop": stop["reason"],
                "wall_s": time.perf_counter() - t0,

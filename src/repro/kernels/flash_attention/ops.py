@@ -5,6 +5,8 @@ import functools
 
 import jax
 
+from repro.obs import named_scope
+
 from .flash_attention import flash_attention
 from .ref import attention_ref
 
@@ -15,12 +17,14 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
               softcap: float = 0.0, block_q: int = 512, block_kv: int = 512,
               use_kernel: bool = True):
     if not use_kernel:
-        return attention_ref(q, k, v, causal=causal, window=window,
-                             softcap=softcap)
-    return flash_attention(
-        q, k, v, causal=causal, window=window, softcap=softcap,
-        block_q=block_q, block_kv=block_kv,
-        interpret=jax.default_backend() != "tpu")
+        with named_scope("attention_ref"):
+            return attention_ref(q, k, v, causal=causal, window=window,
+                                 softcap=softcap)
+    with named_scope("flash_attention_pallas"):
+        return flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            block_q=block_q, block_kv=block_kv,
+            interpret=jax.default_backend() != "tpu")
 
 
 def make_trainable_attention(*, causal: bool = True, window: int = 0,

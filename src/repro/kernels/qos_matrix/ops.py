@@ -5,6 +5,8 @@ import functools
 
 import jax
 
+from repro.obs import kernel_span, named_scope
+
 from .qos_matrix import qos_matrix_pallas
 from .ref import qos_matrix_ref
 
@@ -15,19 +17,25 @@ def qos_matrix(u_alpha, u_delta, u_share_k, u_share_w, u_service,
                use_kernel: bool = True):
     on_tpu = jax.default_backend() == "tpu"
     if use_kernel:
-        return qos_matrix_pallas(
+        with named_scope("qos_matrix_pallas"):
+            return qos_matrix_pallas(
+                u_alpha, u_delta, u_share_k, u_share_w, u_service,
+                sm_acc, sm_k, sm_w, sm_service, delta_max=delta_max,
+                interpret=not on_tpu)
+    with named_scope("qos_matrix_ref"):
+        return qos_matrix_ref(
             u_alpha, u_delta, u_share_k, u_share_w, u_service,
-            sm_acc, sm_k, sm_w, sm_service, delta_max=delta_max,
-            interpret=not on_tpu)
-    return qos_matrix_ref(
-        u_alpha, u_delta, u_share_k, u_share_w, u_service,
-        sm_acc, sm_k, sm_w, sm_service, delta_max=delta_max)
+            sm_acc, sm_k, sm_w, sm_service, delta_max=delta_max)
 
 
 def qos_matrix_from_instance(jinst, use_kernel: bool = True):
     """Convenience wrapper over a repro.core JaxInstance."""
-    return qos_matrix(
-        jinst.u_alpha, jinst.u_delta, jinst.u_share_k, jinst.u_share_w,
-        jinst.u_service, jinst.sm_acc, jinst.sm_k, jinst.sm_w,
-        jinst.sm_service, delta_max=float(jinst.delta_max),
-        use_kernel=use_kernel)
+    # the obs span covers dispatch only (JAX is async); benchmarks that
+    # want honest kernel wall time block_until_ready inside their own span
+    with kernel_span("qos_matrix", U=int(jinst.u_alpha.shape[0]),
+                     P=int(jinst.sm_acc.shape[0]), use_kernel=use_kernel):
+        return qos_matrix(
+            jinst.u_alpha, jinst.u_delta, jinst.u_share_k, jinst.u_share_w,
+            jinst.u_service, jinst.sm_acc, jinst.sm_k, jinst.sm_w,
+            jinst.sm_service, delta_max=float(jinst.delta_max),
+            use_kernel=use_kernel)

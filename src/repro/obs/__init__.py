@@ -1,0 +1,42 @@
+"""repro.obs — determinism-safe tracing, metrics, and trace export.
+
+The observability layer for the whole repo: span tracing with a
+preallocated ring buffer (:mod:`~repro.obs.trace`), a counters/gauges/
+histograms metrics registry (:mod:`~repro.obs.metrics`), a JAX-profiler
+adapter (:mod:`~repro.obs.jaxprof`), and a CLI
+(``python -m repro.obs report|export|tail``).
+
+Everything is **off by default** and strictly observational: enabling
+tracing changes no stored sweep byte and no ``TickReport`` field (tested
+— see ``tests/test_obs.py``). Opt in with::
+
+    from repro import obs
+    obs.enable()                      # or REPRO_OBS=1 in the environment
+    with obs.span("tick.place"):
+        ...
+    obs.save("trace.json")            # raw artifact; export via the CLI
+
+Instrumented hot paths: :mod:`repro.serving.horizon` (per-tick
+materialize/place/route/execute spans, queue-depth + realized-QoS
+gauges, per-request latency histograms), :mod:`repro.sweeps`
+(per-chunk spans, items/s, store I/O timing), :mod:`repro.fleet`
+(worker telemetry files behind ``fleet status`` rate/ETA), and the
+Pallas kernel dispatchers (``kernel.*`` annotations).
+"""
+from .metrics import (METRICS_SCHEMA_VERSION, Counter, Gauge, Histogram,
+                      MetricsRegistry)
+from .trace import (DEFAULT_CAPACITY, OBS_SCHEMA_VERSION, Tracer, count,
+                    disable, enable, enable_from_env, enabled, get_tracer,
+                    load_artifact, sample, save, span, to_chrome_trace,
+                    validate_chrome_trace)
+from .jaxprof import (have_jax_profiler, kernel_span, named_scope,
+                      profile_trace)
+
+__all__ = [
+    "OBS_SCHEMA_VERSION", "METRICS_SCHEMA_VERSION", "DEFAULT_CAPACITY",
+    "Tracer", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "enable", "disable", "enabled", "get_tracer", "enable_from_env",
+    "span", "count", "sample", "save",
+    "load_artifact", "to_chrome_trace", "validate_chrome_trace",
+    "kernel_span", "named_scope", "profile_trace", "have_jax_profiler",
+]

@@ -1,0 +1,210 @@
+"""Command-line entry point: ``python -m repro.obs``.
+
+Operates on the artifacts the rest of the repo produces::
+
+    # summarize a saved obs artifact (spans, counters, histograms)
+    python -m repro.obs report experiments/obs/trace.json
+
+    # convert to Chrome-trace / Perfetto JSON (open in ui.perfetto.dev)
+    python -m repro.obs export experiments/obs/trace.json \\
+        --format chrome-trace --out /tmp/trace_chrome.json
+
+    # metrics snapshot as versioned JSONL
+    python -m repro.obs export experiments/obs/trace.json \\
+        --format jsonl --out /tmp/metrics.jsonl
+
+    # live rate/ETA of a running fleet (worker telemetry + queue)
+    python -m repro.obs tail --root experiments/fleet/demo --interval 2
+
+Artifacts come from ``python -m repro.sweeps ... --obs PATH``, from
+``REPRO_OBS=1 REPRO_OBS_DIR=...`` in any instrumented process (fleet
+workers inherit it), or from ``Tracer.save`` directly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .metrics import METRICS_SCHEMA_VERSION
+from .trace import load_artifact, to_chrome_trace, validate_chrome_trace
+
+__all__ = ["main", "report_text", "span_summaries"]
+
+
+def span_summaries(doc: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Per-span-name aggregate rows from a raw artifact (exact
+    percentiles — the artifact carries every live span)."""
+    names = doc.get("names", [])
+    spans = doc.get("spans", {})
+    ids = np.asarray(spans.get("name", []), np.int64)
+    t0 = np.asarray(spans.get("t0_ns", []), np.float64)
+    t1 = np.asarray(spans.get("t1_ns", []), np.float64)
+    rows = []
+    for nid in sorted(set(ids.tolist())):
+        dur_ms = (t1[ids == nid] - t0[ids == nid]) / 1e6
+        rows.append({
+            "name": names[nid], "count": int(dur_ms.size),
+            "total_ms": float(dur_ms.sum()),
+            "mean_ms": float(dur_ms.mean()),
+            "p50_ms": float(np.percentile(dur_ms, 50)),
+            "p95_ms": float(np.percentile(dur_ms, 95)),
+            "p99_ms": float(np.percentile(dur_ms, 99)),
+        })
+    rows.sort(key=lambda r: -r["total_ms"])
+    return rows
+
+
+def report_text(doc: Dict[str, Any]) -> str:
+    """The ``obs report`` table: spans by total time, then counters and
+    histogram digests."""
+    out = []
+    rows = span_summaries(doc)
+    if rows:
+        out.append(f"{'span':<32} {'count':>7} {'total_ms':>10} "
+                   f"{'mean_ms':>9} {'p50_ms':>9} {'p95_ms':>9} "
+                   f"{'p99_ms':>9}")
+        for r in rows:
+            out.append(f"{r['name']:<32} {r['count']:>7d} "
+                       f"{r['total_ms']:>10.3f} {r['mean_ms']:>9.3f} "
+                       f"{r['p50_ms']:>9.3f} {r['p95_ms']:>9.3f} "
+                       f"{r['p99_ms']:>9.3f}")
+    else:
+        out.append("(no spans recorded)")
+    dropped = doc.get("dropped_spans", 0)
+    if dropped:
+        out.append(f"! ring wrapped: {dropped} oldest span(s) dropped")
+    counters = doc.get("counters", {})
+    if counters:
+        out.append("")
+        out.append("counters:")
+        for name, v in sorted(counters.items()):
+            out.append(f"  {name:<38} {v:g}")
+    hists = [m for m in doc.get("metrics", [])
+             if m.get("kind") == "histogram"]
+    if hists:
+        out.append("")
+        out.append(f"{'histogram':<38} {'count':>7} {'mean':>10} "
+                   f"{'p50':>10} {'p95':>10} {'p99':>10}")
+        for m in hists:
+            labels = ",".join(f"{k}={v}"
+                              for k, v in sorted(m["labels"].items()))
+            label = m["name"] + ("{" + labels + "}" if labels else "")
+            out.append(f"{label:<38} {m['count']:>7d} {m['mean']:>10.4g} "
+                       f"{m['p50']:>10.4g} {m['p95']:>10.4g} "
+                       f"{m['p99']:>10.4g}")
+    return "\n".join(out)
+
+
+def _cmd_report(args: argparse.Namespace) -> int:
+    print(report_text(load_artifact(args.artifact)))
+    return 0
+
+
+def _cmd_export(args: argparse.Namespace) -> int:
+    doc = load_artifact(args.artifact)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    if args.format == "chrome-trace":
+        chrome = to_chrome_trace(doc)
+        n = validate_chrome_trace(chrome)
+        out.write_text(json.dumps(chrome))
+        print(f"[obs] wrote {n} duration event(s) "
+              f"({len(chrome['traceEvents'])} total) to {out} — load in "
+              f"ui.perfetto.dev or chrome://tracing")
+    else:  # jsonl
+        lines = [json.dumps(rec, separators=(",", ":"))
+                 for rec in doc.get("metrics", [])]
+        for name, value in sorted(doc.get("counters", {}).items()):
+            lines.append(json.dumps(
+                {"metrics_schema": METRICS_SCHEMA_VERSION,
+                 "kind": "counter", "name": name, "labels": {},
+                 "value": value}, separators=(",", ":")))
+        for row in span_summaries(doc):
+            lines.append(json.dumps(
+                {"metrics_schema": METRICS_SCHEMA_VERSION,
+                 "kind": "span_summary", "labels": {}, **row},
+                separators=(",", ":")))
+        out.write_text("".join(line + "\n" for line in lines))
+        print(f"[obs] wrote {len(lines)} metric record(s) to {out}")
+    return 0
+
+
+def _fleet_line(status: Dict[str, Any]) -> str:
+    q = status["queue"]
+    parts = [f"pending {q['pending']}", f"leased {q['leased']}",
+             f"done {q['done']}"]
+    if status.get("remaining_items") is not None:
+        parts.append(f"remaining {status['remaining_items']} item(s)")
+    rate = status.get("rate_items_per_s")
+    if rate:
+        parts.append(f"{rate:.2f} items/s")
+    eta = status.get("eta_s")
+    if eta is not None:
+        parts.append(f"ETA {eta:.0f}s")
+    return "[obs tail] " + ", ".join(parts)
+
+
+def _cmd_tail(args: argparse.Namespace) -> int:
+    from repro.fleet.coordinator import status  # deferred: heavy import
+
+    while True:
+        out = status(args.root)
+        print(_fleet_line(out), flush=True)
+        for name, w in sorted(out.get("telemetry", {}).items()):
+            wall = w.get("last_task_wall_s")
+            print(f"  {name:<24} {w.get('items_done', 0):>6} item(s) "
+                  f"{w.get('items_per_s', 0.0):>7.2f} items/s"
+                  + (f"  last chunk {wall:.2f}s" if wall else ""),
+                  flush=True)
+        if args.once:
+            return 0
+        q = out["queue"]
+        if q["pending"] == 0 and q["leased"] == 0:
+            print("[obs tail] queue drained", flush=True)
+            return 0
+        time.sleep(args.interval)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Inspect and export repro.obs trace artifacts; tail "
+                    "a running fleet's telemetry.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rp = sub.add_parser("report", help="text summary of a saved artifact")
+    rp.add_argument("artifact")
+    rp.set_defaults(fn=_cmd_report)
+
+    ex = sub.add_parser("export", help="convert an artifact to "
+                                       "chrome-trace or metrics JSONL")
+    ex.add_argument("artifact")
+    ex.add_argument("--format", choices=("chrome-trace", "jsonl"),
+                    default="chrome-trace")
+    ex.add_argument("--out", required=True)
+    ex.set_defaults(fn=_cmd_export)
+
+    tl = sub.add_parser("tail", help="live fleet rate/ETA from worker "
+                                     "telemetry")
+    tl.add_argument("--root", required=True, help="fleet root directory")
+    tl.add_argument("--interval", type=float, default=2.0)
+    tl.add_argument("--once", action="store_true",
+                    help="print one status line and exit")
+    tl.set_defaults(fn=_cmd_tail)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except (ValueError, OSError) as e:
+        print(f"[obs] error: {e}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,239 @@
+"""Metrics registry: counters, gauges, log-bucketed latency histograms.
+
+The aggregate half of :mod:`repro.obs` (the tracer is the timeline half).
+A :class:`MetricsRegistry` hands out labeled series —
+
+    reg.counter("sweep.items", scenario="steady").inc(64)
+    reg.gauge("serving.queue_depth", scenario="steady").set(12)
+    reg.histogram("serving.latency_s", scenario="steady").observe(0.031)
+
+— keyed by ``(name, sorted labels)``, so the same call site yields the
+same series object every time. Histograms are **log-bucketed**: bucket
+``i`` covers ``(growth^(i-1)·min_value, growth^i·min_value]`` with the
+default growth of ``2**(1/8)`` ≈ 9.05 % per bucket, which bounds any
+quantile estimate's relative error by ``sqrt(growth) − 1`` ≈ 4.4 % while
+storing a 9-decade latency range in ~240 sparse buckets. Quantiles
+(p50/p95/p99) come straight from the cumulative bucket counts — no raw
+samples are kept, so memory is O(buckets), not O(observations).
+
+Snapshots serialize to a versioned JSONL format
+(:data:`METRICS_SCHEMA_VERSION`): one self-describing JSON object per
+line, ``kind`` ∈ {counter, gauge, histogram}. ``benchmarks/run.py
+--json`` embeds the same records, and ``python -m repro.obs export
+--format jsonl`` emits them from any saved obs artifact.
+
+Like everything in :mod:`repro.obs`, metrics are observational only:
+nothing reads them back into placement or scheduling decisions.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple
+
+__all__ = [
+    "METRICS_SCHEMA_VERSION",
+    "DEFAULT_GROWTH",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+]
+
+#: Version stamp of the JSONL snapshot records.
+METRICS_SCHEMA_VERSION = 1
+
+#: Default histogram bucket growth factor: 2**(1/8) per bucket ⇒ 8
+#: buckets per octave, ≤ ~4.4 % relative quantile error.
+DEFAULT_GROWTH = 2.0 ** 0.125
+
+_LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Mapping[str, Any]) -> _LabelKey:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class Counter:
+    """Monotonic counter."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: float = 1) -> None:
+        self.value += n
+
+    def record(self) -> Dict[str, Any]:
+        return {"value": self.value}
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = float("nan")
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def record(self) -> Dict[str, Any]:
+        return {"value": self.value}
+
+
+class Histogram:
+    """Sparse log-bucketed histogram with quantile estimation.
+
+    Values ≤ ``min_value`` collapse into one underflow bucket (index
+    ``None`` conceptually; stored as the smallest index − 1) whose
+    representative value is ``min_value`` — fine for latencies, where
+    anything below a nanosecond is measurement noise anyway.
+    """
+
+    __slots__ = ("growth", "min_value", "_log_growth", "_buckets",
+                 "count", "sum", "min", "max")
+
+    def __init__(self, growth: float = DEFAULT_GROWTH,
+                 min_value: float = 1e-9):
+        if not growth > 1.0:
+            raise ValueError(f"growth must be > 1, got {growth}")
+        self.growth = float(growth)
+        self.min_value = float(min_value)
+        self._log_growth = math.log(self.growth)
+        self._buckets: Dict[int, int] = {}
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def _index(self, v: float) -> int:
+        """Smallest ``i`` with ``min_value * growth**i >= v``."""
+        if v <= self.min_value:
+            return 0
+        return max(0, math.ceil(
+            math.log(v / self.min_value) / self._log_growth - 1e-12))
+
+    def _upper_edge(self, i: int) -> float:
+        return self.min_value * self.growth ** i
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        if math.isnan(v):
+            return  # a tick that served nothing has NaN mean latency
+        i = self._index(v)
+        self._buckets[i] = self._buckets.get(i, 0) + 1
+        self.count += 1
+        self.sum += v
+        self.min = v if v < self.min else self.min
+        self.max = v if v > self.max else self.max
+
+    def observe_many(self, values: Iterable[float]) -> None:
+        for v in values:
+            self.observe(v)
+
+    def quantile(self, q: float) -> float:
+        """Estimated ``q``-quantile (0 ≤ q ≤ 1): the geometric midpoint of
+        the bucket holding the q·count-th observation, clamped to the
+        exact observed [min, max]."""
+        if self.count == 0:
+            return float("nan")
+        rank = q * self.count
+        seen = 0
+        for i in sorted(self._buckets):
+            seen += self._buckets[i]
+            if seen >= rank:
+                hi = self._upper_edge(i)
+                lo = hi / self.growth
+                mid = math.sqrt(lo * hi) if lo > 0 else hi
+                return min(max(mid, self.min), self.max)
+        return self.max  # pragma: no cover - guarded by count above
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else float("nan")
+
+    def summary(self) -> Dict[str, float]:
+        """The p50/p95/p99 digest the benchmarks and reports print."""
+        empty = self.count == 0
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "mean": self.mean,
+            "min": float("nan") if empty else self.min,
+            "max": float("nan") if empty else self.max,
+            "p50": self.quantile(0.50),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+        }
+
+    def record(self) -> Dict[str, Any]:
+        return {
+            "growth": self.growth,
+            "min_value": self.min_value,
+            "buckets": {str(i): n for i, n in sorted(self._buckets.items())},
+            **self.summary(),
+        }
+
+
+class MetricsRegistry:
+    """Labeled series factory + versioned snapshot/JSONL export."""
+
+    def __init__(self):
+        self._series: Dict[Tuple[str, str, _LabelKey], Any] = {}
+
+    def _get(self, kind: str, name: str, labels: Mapping[str, Any],
+             factory) -> Any:
+        key = (kind, str(name), _label_key(labels))
+        series = self._series.get(key)
+        if series is None:
+            series = self._series[key] = factory()
+        return series
+
+    def counter(self, name: str, **labels: Any) -> Counter:
+        return self._get("counter", name, labels, Counter)
+
+    def gauge(self, name: str, **labels: Any) -> Gauge:
+        return self._get("gauge", name, labels, Gauge)
+
+    def histogram(self, name: str, growth: float = DEFAULT_GROWTH,
+                  min_value: float = 1e-9, **labels: Any) -> Histogram:
+        return self._get("histogram", name, labels,
+                         lambda: Histogram(growth, min_value))
+
+    def __len__(self) -> int:
+        return len(self._series)
+
+    def snapshot(self) -> List[Dict[str, Any]]:
+        """One self-describing record per series, stably ordered."""
+        out = []
+        for (kind, name, labels), series in sorted(
+                self._series.items(), key=lambda kv: kv[0]):
+            out.append({
+                "metrics_schema": METRICS_SCHEMA_VERSION,
+                "kind": kind,
+                "name": name,
+                "labels": dict(labels),
+                **series.record(),
+            })
+        return out
+
+    def to_jsonl(self) -> str:
+        return "".join(json.dumps(rec, separators=(",", ":")) + "\n"
+                       for rec in self.snapshot())
+
+    def histograms(self, name: Optional[str] = None
+                   ) -> Dict[str, Dict[str, float]]:
+        """``{"name{labels}": summary}`` for every (matching) histogram —
+        the digest ``benchmarks/run.py --json`` embeds."""
+        out = {}
+        for (kind, nm, labels), series in sorted(
+                self._series.items(), key=lambda kv: kv[0]):
+            if kind != "histogram" or (name is not None and nm != name):
+                continue
+            suffix = ",".join(f"{k}={v}" for k, v in labels)
+            out[nm + ("{" + suffix + "}" if suffix else "")] = \
+                series.summary()
+        return out

@@ -55,6 +55,7 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.dynamic import DynamicPlacer
 from repro.core.instance import PIESInstance
 from repro.core.qos import qos_matrix_np
@@ -291,7 +292,23 @@ def _requeue_evicted(sched: ContinuousScheduler, evicted: np.ndarray,
 
 
 def run_horizon(config: HorizonConfig) -> HorizonResult:
-    """Drive one scenario horizon through placement → routing → serving."""
+    """Drive one scenario horizon through placement → routing → serving.
+
+    Instrumented with :mod:`repro.obs` (off by default, observational
+    only — a traced run produces byte-identical ``TickReport``\\ s and
+    per-request finish times): per-tick ``tick.materialize`` /
+    ``tick.place`` / ``tick.route`` / ``tick.execute`` spans, a
+    ``kernel.qos_matrix_np`` span inside placement, queue-depth and
+    in-flight gauge samples at every tick boundary, realized-QoS gauge
+    samples, and per-request latency histograms labeled by (scenario,
+    policy).
+    """
+    with obs.span("horizon.run", scenario=config.scenario,
+                  policy=config.policy, seed=config.seed):
+        return _run_horizon(config)
+
+
+def _run_horizon(config: HorizonConfig) -> HorizonResult:
     from repro.workloads import get_scenario  # deferred: workloads uses core
 
     sc = get_scenario(config.scenario, **dict(config.overrides))
@@ -317,55 +334,65 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
     uid = 0
     done_ptr = 0   # completions already fed back to the controller
     for t in range(T):
-        inst = sc.instance_at(config.seed, t, mobility_cache=mobility_cache)
-        Q = qos_matrix_np(inst)
-        x, value, loads = placer.step(inst, Q)
-        applied_stickiness = placer.current_stickiness if feedback \
-            else config.stickiness
-        # cold starts: every implementation the placer just loaded spends
-        # the first switching_cost seconds of the tick loading and serves
-        # nothing until then — gated up front, so an impl placed now but
-        # first routed to next tick still queues through its load window
-        if config.switching_cost > 0.0:
-            ready_at = t * config.tick_duration + config.switching_cost
-            for e, p in np.argwhere(placer.new_loads):
-                key = (int(e), int(p))
-                sched.add_executor(key, ExecutorProfile.from_comp_cost(
-                    float(inst.sm_w[p]), config.max_batch))
-                sched.delay_executor(key, ready_at)
-        # backlog queued on implementations this re-placement evicted is
-        # re-routed (or dropped) before any of it can start executing
-        n_requeued = 0
-        if placer.evicted is not None and placer.evicted.any():
-            n_requeued = _requeue_evicted(sched, placer.evicted, inst, x,
-                                          config, tick_reqs, meta)
-        y, _ = oms_np(inst, x, Q)
-
-        times = _arrival_times(sc, config.seed, t, inst.U,
-                               config.tick_duration)
-        reqs: List[ArrivingRequest] = []
-        for u in range(inst.U):
-            p = int(y[u])
-            if p < 0:
-                continue
-            e = int(inst.u_edge[u])
-            if (e, p) not in sched.executors:
-                sched.add_executor(
-                    (e, p), ExecutorProfile.from_comp_cost(
+        with obs.span("tick.materialize", tick=t):
+            inst = sc.instance_at(config.seed, t,
+                                  mobility_cache=mobility_cache)
+        with obs.span("tick.place", tick=t):
+            with obs.kernel_span("qos_matrix_np", U=inst.U, P=inst.P):
+                Q = qos_matrix_np(inst)
+            x, value, loads = placer.step(inst, Q)
+            applied_stickiness = placer.current_stickiness if feedback \
+                else config.stickiness
+            # cold starts: every implementation the placer just loaded
+            # spends the first switching_cost seconds of the tick loading
+            # and serves nothing until then — gated up front, so an impl
+            # placed now but first routed to next tick still queues
+            # through its load window
+            if config.switching_cost > 0.0:
+                ready_at = t * config.tick_duration + config.switching_cost
+                for e, p in np.argwhere(placer.new_loads):
+                    key = (int(e), int(p))
+                    sched.add_executor(key, ExecutorProfile.from_comp_cost(
                         float(inst.sm_w[p]), config.max_batch))
-            reqs.append(ArrivingRequest(
-                uid=uid + u, impl=p, edge=e, arrival=float(times[u]),
-                prompt_tokens=config.prompt_tokens,
-                new_tokens=config.new_tokens,
-                alpha=float(inst.u_alpha[u]), delta=float(inst.u_delta[u]),
-                accuracy=float(inst.sm_acc[p]),
-                service=int(inst.u_service[u])))
-        uid += inst.U
-        sched.submit(reqs)
-        sched.run_until((t + 1) * config.tick_duration)
+                    sched.delay_executor(key, ready_at)
+        with obs.span("tick.route", tick=t):
+            # backlog queued on implementations this re-placement evicted
+            # is re-routed (or dropped) before any of it can execute
+            n_requeued = 0
+            if placer.evicted is not None and placer.evicted.any():
+                n_requeued = _requeue_evicted(sched, placer.evicted, inst,
+                                              x, config, tick_reqs, meta)
+            y, _ = oms_np(inst, x, Q)
+
+            times = _arrival_times(sc, config.seed, t, inst.U,
+                                   config.tick_duration)
+            reqs: List[ArrivingRequest] = []
+            for u in range(inst.U):
+                p = int(y[u])
+                if p < 0:
+                    continue
+                e = int(inst.u_edge[u])
+                if (e, p) not in sched.executors:
+                    sched.add_executor(
+                        (e, p), ExecutorProfile.from_comp_cost(
+                            float(inst.sm_w[p]), config.max_batch))
+                reqs.append(ArrivingRequest(
+                    uid=uid + u, impl=p, edge=e, arrival=float(times[u]),
+                    prompt_tokens=config.prompt_tokens,
+                    new_tokens=config.new_tokens,
+                    alpha=float(inst.u_alpha[u]),
+                    delta=float(inst.u_delta[u]),
+                    accuracy=float(inst.sm_acc[p]),
+                    service=int(inst.u_service[u])))
+            uid += inst.U
+        with obs.span("tick.execute", tick=t):
+            sched.submit(reqs)
+            sched.run_until((t + 1) * config.tick_duration)
 
         tick_reqs.append(reqs)
         boundary.append((sched.queue_depth(), sched.in_flight()))
+        obs.sample("serving.queue_depth", boundary[-1][0])
+        obs.sample("serving.in_flight", boundary[-1][1])
         meta.append({"submitted": inst.U, "dropped": int((y < 0).sum()),
                      "loads": loads, "value": float(value),
                      "delta_max": float(inst.delta_max),
@@ -390,8 +417,13 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
 
     # Backlog left at the horizon end drains to completion (graceful
     # shutdown); its requests stay attributed to their arrival ticks.
-    sched.drain()
+    with obs.span("horizon.drain"):
+        sched.drain()
 
+    tracer = obs.get_tracer()
+    lat_hist = tracer.metrics.histogram(
+        "serving.latency_s", scenario=config.scenario,
+        policy=config.policy) if tracer is not None else None
     per_tick: List[TickReport] = []
     for t in range(T):
         reqs, m = tick_reqs[t], meta[t]
@@ -404,6 +436,8 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
                 np.array([r.alpha for r in reqs]), m["delta_max"])
         else:
             lats, qos, missed = np.zeros(0), np.zeros(0), np.zeros(0, bool)
+        if lat_hist is not None:
+            lat_hist.observe_many(lats)
         per_tick.append(TickReport(
             tick=t, submitted=m["submitted"], served=len(reqs),
             dropped=m["dropped"],
@@ -417,6 +451,21 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
             requeued=m["requeued"], stickiness=m["stickiness"],
             mean_accuracy=float(np.mean([r.accuracy for r in reqs]))
             if reqs else float("nan")))
+
+    if tracer is not None:
+        for rep in per_tick:
+            obs.sample("serving.realized_qos", rep.mean_realized_qos)
+        tracer.metrics.gauge(
+            "serving.realized_qos", scenario=config.scenario,
+            policy=config.policy).set(
+                float(sum(r.mean_realized_qos * r.submitted
+                          for r in per_tick) /
+                      max(sum(r.submitted for r in per_tick), 1)))
+        obs.count("serving.submitted",
+                  sum(r.submitted for r in per_tick))
+        obs.count("serving.deadline_misses",
+                  sum(r.deadline_misses for r in per_tick))
+        obs.count("serving.requeued", sum(r.requeued for r in per_tick))
 
     return HorizonResult(config=config, per_tick=per_tick,
                          requests=[r for reqs in tick_reqs for r in reqs])

@@ -239,11 +239,21 @@ def main(argv: Optional[List[str]] = None) -> int:
                          f"path (atol {VALIDATE_ATOL})")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the aggregate summary as JSON")
+    ap.add_argument("--obs", default=None, metavar="PATH",
+                    help="enable repro.obs tracing and save the raw "
+                         "artifact at PATH (inspect with python -m "
+                         "repro.obs report/export)")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
     if args.kind == "serving" and args.validate:
         ap.error("--validate compares the batched accelerator path against "
                  "the NumPy host path; kind='serving' has neither")
+
+    from repro import obs
+    if args.obs:
+        obs.enable()
+    else:
+        obs.enable_from_env()  # REPRO_OBS=1 — same switch workers use
 
     spec = build_spec(args)
     store_dir = None
@@ -297,6 +307,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.json:
         Path(args.json).parent.mkdir(parents=True, exist_ok=True)
         Path(args.json).write_text(json.dumps(summary, indent=1))
+    if args.obs:
+        Path(args.obs).parent.mkdir(parents=True, exist_ok=True)
+        obs.save(args.obs)
+        if not args.quiet:
+            tr = obs.get_tracer()
+            print(f"[obs] saved {tr.n_spans} span(s) to {args.obs}")
     if validate_failed:
         return 1
     return 0 if result.complete or args.max_chunks is not None else 2

@@ -35,6 +35,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .spec import SweepSpec, WorkItem, envelope_for, materialize, variant_key
 from .store import SweepStore
 
@@ -258,6 +260,20 @@ def _serving_metrics(per_tick, ticks: Sequence[int]
             for name in SERVING_METRIC_NAMES}
 
 
+def _note_chunk(executor: str, n_items: int, wall_s: float) -> None:
+    """Feed chunk throughput into the active tracer (no-op when off)."""
+    tracer = obs.get_tracer()
+    if tracer is None:
+        return
+    tracer.metrics.counter("sweep.items", executor=executor).inc(n_items)
+    tracer.metrics.counter("sweep.chunks", executor=executor).inc()
+    if wall_s > 0:
+        rate = n_items / wall_s
+        tracer.metrics.histogram("sweep.items_per_s",
+                                 executor=executor).observe(rate)
+        tracer.sample("sweep.items_per_s", rate)
+
+
 # ===========================================================================
 # The engine
 # ===========================================================================
@@ -369,8 +385,13 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
                     stopped = True
                     break
                 t0 = time.perf_counter()
-                res = _serving_horizon(scenario, overrides, algo, seed, T)
+                with obs.span("sweep.chunk", executor="serving",
+                              scenario=scenario, algo=algo, seed=int(seed),
+                              items=len(chunk)):
+                    res = _serving_horizon(scenario, overrides, algo,
+                                           seed, T)
                 wall = time.perf_counter() - t0
+                _note_chunk(executor, len(chunk), wall)
                 chunk_keys = [k for _, k in chunk]
                 chunk_ticks = [it.tick for it, _ in chunk]
                 vals = res.tick_values()[chunk_ticks]
@@ -408,22 +429,27 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
             chunk = pending[lo:lo + cs]
             chunk_items = [it for it, _ in chunk]
             chunk_keys = [k for _, k in chunk]
-            insts = get_instances(scenario, overrides,
-                                  [(it.seed, it.tick) for it in chunk_items])
+            with obs.span("sweep.materialize", items=len(chunk)):
+                insts = get_instances(
+                    scenario, overrides,
+                    [(it.seed, it.tick) for it in chunk_items])
             t0 = time.perf_counter()
-            if executor == "accel":
-                vals, path, exec_s = _eval_accel_chunk(insts, algo, envelope,
-                                                       mesh, spec.max_iters)
-                wall = time.perf_counter() - t0
-                # per-item time is steady-state execution, not compile
-                times = np.full(len(chunk), exec_s / len(chunk))
-            else:
-                path = "host"
-                vt = [_host_value(inst, algo, it.seed, it.tick)
-                      for inst, it in zip(insts, chunk_items)]
-                wall = time.perf_counter() - t0
-                vals = np.array([v for v, _ in vt])
-                times = np.array([t for _, t in vt])
+            with obs.span("sweep.chunk", executor=executor,
+                          scenario=scenario, algo=algo, items=len(chunk)):
+                if executor == "accel":
+                    vals, path, exec_s = _eval_accel_chunk(
+                        insts, algo, envelope, mesh, spec.max_iters)
+                    wall = time.perf_counter() - t0
+                    # per-item time is steady-state execution, not compile
+                    times = np.full(len(chunk), exec_s / len(chunk))
+                else:
+                    path = "host"
+                    vt = [_host_value(inst, algo, it.seed, it.tick)
+                          for inst, it in zip(insts, chunk_items)]
+                    wall = time.perf_counter() - t0
+                    vals = np.array([v for v, _ in vt])
+                    times = np.array([t for _, t in vt])
+            _note_chunk(executor, len(chunk), wall)
             paths.add(path)
             meta = {"scenario": scenario, "overrides": dict(overrides),
                     "algo": algo, "executor": executor, "path": path,

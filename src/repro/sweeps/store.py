@@ -46,6 +46,8 @@ from typing import Any, Dict, Iterable, Iterator, List, Mapping, Optional, \
 
 import numpy as np
 
+from repro import obs
+
 try:                      # POSIX advisory locks; auto-released on death
     import fcntl
 except ImportError:       # pragma: no cover - non-POSIX fallback (no lock)
@@ -214,6 +216,10 @@ class SweepStore:
         touched the file, so the rewrite stays noise next to evaluation.
         """
         assert len(keys) == len(values) == len(times)
+        with obs.span("store.add_chunk", rows=len(keys)):
+            return self._add_chunk(keys, values, times, meta, metrics)
+
+    def _add_chunk(self, keys, values, times, meta, metrics) -> str:
         arrays = {"values": np.asarray(values, np.float64),
                   "times": np.asarray(times, np.float64),
                   "keys": np.asarray(list(keys))}

@@ -1,0 +1,439 @@
+"""repro.obs — ring-buffer tracer mechanics, golden Chrome-trace export,
+histogram quantile accuracy vs NumPy, the observational-only invariant
+(byte-identical serving stores and TickReports with tracing on), the
+disabled-path overhead guard, fleet telemetry, and the CLI."""
+import dataclasses
+import json
+import math
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import trace as obs_trace
+from repro.obs.cli import main as obs_main
+from repro.obs.metrics import Histogram, MetricsRegistry
+
+#: Shrunk scenario (see tests/test_horizon.py) — keeps horizons fast.
+SMALL = {"n_user_slots": 32, "n_services": 8, "max_impls": 3, "n_edges": 4}
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Tracing must be off by default and never leak between tests."""
+    assert not obs.enabled()
+    yield
+    obs.disable()
+
+
+def _fake_clock(step_ns=1000, start=1000):
+    state = {"t": start - step_ns}
+
+    def clock():
+        state["t"] += step_ns
+        return state["t"]
+
+    return clock
+
+
+# ===========================================================================
+# Tracer core
+# ===========================================================================
+
+def test_span_records_into_ring():
+    tr = obs.Tracer(capacity=16, clock=_fake_clock())
+    with tr.span("outer", {"k": 1}):
+        with tr.span("inner"):
+            pass
+    assert tr.n_spans == 2 and tr.dropped_spans == 0
+    doc = tr.snapshot()
+    # inner exits first, so row 0 is inner, row 1 is outer
+    assert [doc["names"][i] for i in doc["spans"]["name"]] == \
+        ["inner", "outer"]
+    assert doc["spans"]["depth"] == [1, 0]
+    assert doc["span_args"] == {"1": {"k": 1}}
+    assert doc["obs_schema"] == obs.OBS_SCHEMA_VERSION
+
+
+def test_ring_wrap_drops_oldest_and_counts():
+    tr = obs.Tracer(capacity=4, clock=_fake_clock())
+    for i in range(10):
+        with tr.span(f"s{i}"):
+            pass
+    assert tr.n_spans == 10 and tr.dropped_spans == 6
+    doc = tr.snapshot()
+    # oldest → newest of the surviving window
+    assert [doc["names"][i] for i in doc["spans"]["name"]] == \
+        ["s6", "s7", "s8", "s9"]
+    assert doc["dropped_spans"] == 6
+
+
+def test_span_durations_and_counters_and_gauges():
+    tr = obs.Tracer(capacity=8, clock=_fake_clock(step_ns=1000))
+    with tr.span("work"):
+        pass                        # t0=1000 t1=2000 → 1µs
+    tr.count("items", 3)
+    tr.count("items", 2)
+    tr.sample("queue_depth", 7.5)   # t=3000
+    np.testing.assert_allclose(tr.span_durations_s("work"), [1e-6])
+    assert tr.span_durations_s("missing").size == 0
+    assert tr.counters == {"items": 5}
+    doc = tr.snapshot()
+    assert doc["gauges"]["value"] == [7.5]
+
+
+def test_module_level_fast_path_and_enable_disable():
+    assert obs.get_tracer() is None
+    # disabled: the module-level helpers are no-ops returning the shared
+    # null span
+    s1, s2 = obs.span("a"), obs.span("b", k=1)
+    assert s1 is s2
+    obs.count("n")                      # no-op, no error
+    obs.sample("g", 1.0)
+    assert obs.save("/nonexistent/x.json") is False
+    tr = obs.enable(capacity=8)
+    assert obs.enabled() and obs.get_tracer() is tr
+    with obs.span("a", k=2):
+        pass
+    obs.count("n", 2)
+    assert tr.n_spans == 1 and tr.counters == {"n": 2}
+    assert obs.disable() is tr
+    assert not obs.enabled()
+
+
+def test_enable_from_env(monkeypatch, tmp_path):
+    monkeypatch.delenv("REPRO_OBS", raising=False)
+    assert obs.enable_from_env() is None and not obs.enabled()
+    monkeypatch.setenv("REPRO_OBS", "0")
+    assert obs.enable_from_env() is None and not obs.enabled()
+    monkeypatch.setenv("REPRO_OBS", "1")
+    tr = obs.enable_from_env()
+    assert tr is not None and obs.get_tracer() is tr
+
+
+def test_save_and_load_artifact_roundtrip(tmp_path):
+    tr = obs.enable(capacity=8, clock=_fake_clock())
+    with obs.span("a"):
+        pass
+    path = tmp_path / "trace.json"
+    assert obs.save(path) is True
+    doc = obs.load_artifact(path)
+    assert doc["names"] == ["a"] and doc["obs_schema"] == \
+        obs.OBS_SCHEMA_VERSION
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"obs_schema": 999}))
+    with pytest.raises(ValueError, match="schema v999"):
+        obs.load_artifact(bad)
+
+
+# ===========================================================================
+# Chrome-trace export (golden, via the injectable clock)
+# ===========================================================================
+
+def test_chrome_trace_golden():
+    tr = obs.Tracer(capacity=8, clock=_fake_clock(step_ns=1000))
+    with tr.span("tick.place", {"tick": 0}):     # t0=1000
+        with tr.span("kernel.qos_matrix"):       # t0=2000 t1=3000
+            pass
+    #                                              t1=4000
+    tr.sample("serving.queue_depth", 3.0)        # t=5000
+    doc = tr.snapshot()
+    doc["pid"] = 7  # pin the one environment-dependent field
+    assert obs.to_chrome_trace(doc) == {
+        "displayTimeUnit": "ms",
+        "otherData": {"obs_schema": 1, "dropped_spans": 0, "counters": {}},
+        "traceEvents": [
+            {"ph": "M", "pid": 7, "tid": 0, "name": "process_name",
+             "args": {"name": "repro.obs"}},
+            {"ph": "X", "name": "kernel.qos_matrix", "cat": "kernel",
+             "pid": 7, "tid": 0, "ts": 1.0, "dur": 1.0},
+            {"ph": "X", "name": "tick.place", "cat": "tick", "pid": 7,
+             "tid": 0, "ts": 0.0, "dur": 3.0, "args": {"tick": 0}},
+            {"ph": "C", "name": "serving.queue_depth", "cat": "serving",
+             "pid": 7, "tid": 0, "ts": 4.0, "args": {"value": 3.0}},
+        ],
+    }
+
+
+def test_validate_chrome_trace():
+    tr = obs.Tracer(capacity=8, clock=_fake_clock())
+    with tr.span("a"):
+        pass
+    assert obs.validate_chrome_trace(tr.chrome_trace()) == 1
+    with pytest.raises(ValueError, match="no traceEvents"):
+        obs.validate_chrome_trace({"traceEvents": []})
+    with pytest.raises(ValueError, match="malformed"):
+        obs.validate_chrome_trace({"traceEvents": [{"name": "x"}]})
+    with pytest.raises(ValueError, match="missing 'dur'"):
+        obs.validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "x", "ts": 0,
+                              "pid": 0, "tid": 0}]})
+
+
+# ===========================================================================
+# Metrics: histograms vs NumPy, registry, JSONL
+# ===========================================================================
+
+def test_histogram_percentiles_match_numpy():
+    rng = np.random.default_rng(7)
+    samples = rng.lognormal(mean=-3.0, sigma=1.0, size=20_000)
+    h = Histogram()
+    h.observe_many(samples)
+    assert h.count == samples.size
+    np.testing.assert_allclose(h.sum, samples.sum())
+    for q in (0.50, 0.95, 0.99):
+        exact = float(np.percentile(samples, 100 * q))
+        got = h.quantile(q)
+        # log-bucketing bounds relative error by sqrt(growth)-1 ≈ 4.4%
+        assert abs(got - exact) / exact < 0.05, (q, got, exact)
+    s = h.summary()
+    assert s["min"] == samples.min() and s["max"] == samples.max()
+
+
+def test_histogram_edge_cases():
+    h = Histogram()
+    assert math.isnan(h.quantile(0.5)) and h.summary()["count"] == 0
+    h.observe(float("nan"))     # ignored, not stored
+    assert h.count == 0
+    h.observe(0.0)              # underflow bucket
+    h.observe(5.0)
+    assert h.count == 2 and h.min == 0.0 and h.max == 5.0
+    assert 0.0 <= h.quantile(0.0) <= h.quantile(1.0) <= 5.0
+
+
+def test_registry_series_identity_and_jsonl():
+    reg = MetricsRegistry()
+    c = reg.counter("sweep.items", executor="serving")
+    c.inc(4)
+    assert reg.counter("sweep.items", executor="serving") is c
+    assert reg.counter("sweep.items", executor="host") is not c
+    reg.gauge("qos").set(0.9)
+    reg.histogram("lat", scenario="steady").observe_many([0.01, 0.02])
+    lines = reg.to_jsonl().strip().splitlines()
+    recs = [json.loads(line) for line in lines]
+    assert len(recs) == 4
+    assert all(r["metrics_schema"] == obs.METRICS_SCHEMA_VERSION
+               for r in recs)
+    by_kind = {}
+    for r in recs:
+        by_kind.setdefault(r["kind"], []).append(r)
+    assert by_kind["counter"][0]["labels"] == {"executor": "host"}
+    hist = by_kind["histogram"][0]
+    assert hist["count"] == 2 and hist["labels"] == {"scenario": "steady"}
+    assert reg.histograms("lat") == \
+        {"lat{scenario=steady}": reg.histogram("lat",
+                                               scenario="steady").summary()}
+
+
+# ===========================================================================
+# The hard invariant: tracing is observational only
+# ===========================================================================
+
+def _spec():
+    from repro.sweeps import SweepSpec
+    grid = (tuple(sorted({**SMALL, "switching_cost": 0.0,
+                          "stickiness": 0.0}.items())),)
+    return SweepSpec(kind="serving", scenarios=("steady",), seeds=(0, 1),
+                     n_ticks=2, algos=("edf",), override_grid=grid)
+
+
+def test_serving_store_byte_identical_with_obs_on(tmp_path):
+    from repro.sweeps import SweepStore, run_sweep
+    run_sweep(_spec(), store_dir=tmp_path / "off")
+    obs.enable()
+    run_sweep(_spec(), store_dir=tmp_path / "on")
+    tr = obs.disable()
+    assert tr.n_spans > 0  # tracing actually happened
+
+    off, on = SweepStore(tmp_path / "off"), SweepStore(tmp_path / "on")
+    assert off.keys() == on.keys() and len(off) == 4
+    for key in off.keys():
+        a, b = np.float64(off.value(key)), np.float64(on.value(key))
+        assert a.tobytes() == b.tobytes()
+        ma, mb = off.metrics(key), on.metrics(key)
+        assert ma.keys() == mb.keys()
+        for name in ma:
+            assert np.float64(ma[name]).tobytes() == \
+                np.float64(mb[name]).tobytes(), (key, name)
+    # chunk structure identical too (times are wall-clock and exempt)
+    assert [c["keys"] for c in off.chunks()] == \
+        [c["keys"] for c in on.chunks()]
+
+
+def test_tick_reports_identical_with_obs_on():
+    from repro.serving.horizon import HorizonConfig, run_horizon
+    cfg = HorizonConfig(scenario="steady", policy="edf", seed=0, n_ticks=2,
+                        overrides=tuple(sorted(SMALL.items())))
+    ref = run_horizon(cfg)
+    obs.enable()
+    traced = run_horizon(cfg)
+    obs.disable()
+    np.testing.assert_array_equal(ref.tick_values(), traced.tick_values())
+    assert len(ref.per_tick) == len(traced.per_tick)
+    for a, b in zip(ref.per_tick, traced.per_tick):
+        # repr-compare so NaN fields (empty-tick latencies) count as equal
+        assert repr(dataclasses.asdict(a)) == repr(dataclasses.asdict(b))
+
+
+# ===========================================================================
+# Disabled-path overhead guard
+# ===========================================================================
+
+def test_disabled_span_overhead_under_budget():
+    assert not obs.enabled()
+    n = 20_000
+    reps = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            with obs.span("tick.place"):
+                pass
+        reps.append((time.perf_counter() - t0) / n)
+    noop_s = min(reps)
+    # the no-op span must stay in the nanosecond regime — 5µs is ~20x
+    # headroom over measured (~250ns) while still failing a pathological
+    # regression (e.g. building a real span or dict on the disabled path)
+    assert noop_s < 5e-6, f"disabled span costs {noop_s * 1e9:.0f}ns"
+
+    # arithmetic overhead bound for a traced workload: a serving tick
+    # records ~6 span/gauge events over >= 10ms of work — even at the
+    # 5µs ceiling that is 30µs/tick < 0.3%, far under the 3% contract
+    events_per_tick, tick_floor_s = 6, 0.010
+    assert 100 * events_per_tick * noop_s / tick_floor_s < 3.0
+
+
+# ===========================================================================
+# Fleet telemetry
+# ===========================================================================
+
+def test_worker_telemetry_record_and_staleness(tmp_path):
+    from repro.fleet.telemetry import (DEFAULT_STALE_S, WorkerTelemetry,
+                                       read_telemetry)
+    now = {"t": 1000.0}
+    wt = WorkerTelemetry(tmp_path, "w0", clock=lambda: now["t"])
+    wt.start()
+    wt.task_done("t1", 4, 0.5)
+    rec = json.loads((tmp_path / "telemetry" / "w0.json").read_text())
+    assert rec["owner"] == "w0" and rec["state"] == "running"
+    assert rec["tasks_done"] == 1 and rec["items_done"] == 4
+    assert rec["last_task"] == "t1" and rec["last_task_wall_s"] == 0.5
+    assert rec["items_per_s"] > 0
+
+    fresh = read_telemetry(tmp_path, now=now["t"])
+    assert fresh["workers"]["w0"]["live"] is True
+    assert fresh["rate_items_per_s"] == rec["items_per_s"]
+    # beyond the staleness window the frozen file stops counting
+    stale = read_telemetry(tmp_path, now=now["t"] + DEFAULT_STALE_S + 1)
+    assert stale["workers"]["w0"]["live"] is False
+    assert stale["rate_items_per_s"] == 0.0
+    # a finished worker is never live, however fresh its record
+    wt.stop("drained")
+    done = read_telemetry(tmp_path, now=now["t"])
+    assert done["workers"]["w0"]["state"] == "drained"
+    assert done["workers"]["w0"]["live"] is False
+
+
+def test_fleet_status_reports_rate_and_eta(tmp_path):
+    from repro.fleet import plan, run_worker, status
+    root = tmp_path / "fleet"
+    pl = plan(_spec(), root)
+    assert pl["n_tasks"] == 2
+    st = status(root)
+    # nothing ran yet: full backlog, no live rate, no ETA
+    assert st["remaining_items"] == 4
+    assert st["rate_items_per_s"] == 0.0 and st["eta_s"] is None
+    run_worker(root, owner="w0")
+    st = status(root, stale_s=1e9)  # worker already exited; keep it fresh
+    assert st["remaining_items"] == 0 and st["eta_s"] is None
+    tele = st["telemetry"]["w0"]
+    assert tele["items_done"] == 4 and tele["state"] == "drained"
+    assert tele["last_task_wall_s"] > 0
+
+
+# ===========================================================================
+# jax profiler adapter
+# ===========================================================================
+
+def test_kernel_span_prefix_and_named_scope():
+    tr = obs.enable(capacity=8)
+    with obs.kernel_span("qos_matrix", U=4):
+        pass
+    with obs.kernel_span("kernel.already_prefixed"):
+        pass
+    doc = tr.snapshot()
+    assert [doc["names"][i] for i in doc["spans"]["name"]] == \
+        ["kernel.qos_matrix", "kernel.already_prefixed"]
+    obs.disable()
+    # named_scope works outside jit and as a null context without a tracer
+    with obs.named_scope("x"):
+        pass
+    assert obs.have_jax_profiler() in (True, False)
+
+
+def test_jax_annotations_tracer_smoke():
+    tr = obs.Tracer(capacity=8, jax_annotations=True)
+    with tr.span("tick.place"):
+        pass
+    assert tr.n_spans == 1
+
+
+# ===========================================================================
+# CLI: report / export / tail
+# ===========================================================================
+
+def _artifact(tmp_path):
+    tr = obs.Tracer(capacity=8, clock=_fake_clock())
+    with tr.span("tick.place", {"tick": 0}):
+        pass
+    tr.count("serving.submitted", 12)
+    tr.sample("serving.queue_depth", 2.0)
+    tr.metrics.histogram("serving.latency_s",
+                         scenario="steady").observe_many([0.01, 0.05])
+    path = tmp_path / "trace.json"
+    tr.save(path)
+    return path
+
+
+def test_cli_report(tmp_path, capsys):
+    assert obs_main(["report", str(_artifact(tmp_path))]) == 0
+    out = capsys.readouterr().out
+    assert "tick.place" in out and "serving.submitted" in out
+    assert "serving.latency_s{scenario=steady}" in out
+
+
+def test_cli_export_chrome_trace_and_jsonl(tmp_path):
+    art = _artifact(tmp_path)
+    chrome = tmp_path / "chrome.json"
+    assert obs_main(["export", str(art), "--format", "chrome-trace",
+                     "--out", str(chrome)]) == 0
+    doc = json.loads(chrome.read_text())
+    assert obs.validate_chrome_trace(doc) == 1
+    assert any(ev.get("ph") == "C" for ev in doc["traceEvents"])
+
+    jsonl = tmp_path / "metrics.jsonl"
+    assert obs_main(["export", str(art), "--format", "jsonl",
+                     "--out", str(jsonl)]) == 0
+    recs = [json.loads(line) for line in
+            jsonl.read_text().strip().splitlines()]
+    kinds = {r["kind"] for r in recs}
+    assert kinds == {"histogram", "counter", "span_summary"}
+    assert all(r["metrics_schema"] == obs.METRICS_SCHEMA_VERSION
+               for r in recs)
+
+
+def test_cli_errors(tmp_path, capsys):
+    assert obs_main(["report", str(tmp_path / "missing.json")]) == 1
+    assert "error" in capsys.readouterr().err
+
+
+def test_cli_tail_once(tmp_path, capsys):
+    from repro.fleet import plan, run_worker
+    root = tmp_path / "fleet"
+    plan(_spec(), root)
+    run_worker(root, owner="w0")
+    assert obs_main(["tail", "--root", str(root), "--once"]) == 0
+    out = capsys.readouterr().out
+    assert "[obs tail]" in out and "remaining 0 item(s)" in out
+    assert "w0" in out
