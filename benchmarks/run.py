@@ -9,17 +9,48 @@ typed fields) under a versioned schema (:data:`BENCH_SCHEMA_VERSION`),
 plus the repro.obs metric digests (latency/throughput histogram
 summaries) collected while the benchmarks ran — so the BENCH_* perf
 trajectory can be captured mechanically (seed: ``BENCH_baseline.json``).
+
+The regression gate and trajectory::
+
+    # run only the fast deterministic rows and diff against the committed
+    # baseline: quality fields within tolerance both directions, timings
+    # within --max-slowdown; exit 3 on any violation (the CI gate)
+    PYTHONPATH=src python -m benchmarks.run \\
+        --rows serving_horizon,tuning_fit,obs_overhead \\
+        --json /tmp/bench.json --compare BENCH_baseline.json \\
+        --max-slowdown 25
+
+    # append this run to the schema-versioned perf trajectory
+    PYTHONPATH=src python -m benchmarks.run --rows serving_horizon \\
+        --trajectory BENCH_trajectory.jsonl
+
+Comparison semantics live in :func:`repro.obs.slo.compare_bench`: fields
+with a timing suffix (``_us``/``_ns``/``_ms``/``_per_s``/``_pct``) are
+machine-dependent and only bounded by the slowdown factor; everything
+else (ratios, QoS, miss rates) is a deterministic simulation output and
+must reproduce within ``atol + rtol*|base|``.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 import time
 from pathlib import Path
 
 #: Version stamp of the --json record layout.
 BENCH_SCHEMA_VERSION = 1
+
+#: Version stamp of the --trajectory JSONL record layout.
+BENCH_TRAJ_SCHEMA_VERSION = 1
+
+#: Row-group names accepted by --rows, in run order ("kernels" expands to
+#: the kernel_* micro rows).
+ROW_GROUPS = ("fig3_validation", "fig4_scale", "fig5_realworld",
+              "serving_horizon", "tuning_fit", "fleet_scaling",
+              "scenario_sweep", "kernels", "obs_overhead",
+              "roofline_table")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -56,15 +87,53 @@ class _Emitter:
                           "fields": _parse_derived(derived)})
 
 
-def main() -> None:
+def _git_rev() -> "str | None":
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=Path(__file__).resolve().parent, capture_output=True,
+            text=True, timeout=5).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows as structured JSON")
+    ap.add_argument("--rows", default=None,
+                    help="comma list of row groups to run (of: "
+                         + ",".join(ROW_GROUPS) + "); default: all")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="diff this run against a baseline --json document "
+                         "(repro.obs.slo.compare_bench); exit 3 on any "
+                         "regression")
+    ap.add_argument("--max-slowdown", type=float, default=4.0,
+                    help="--compare: timing fields may not exceed this "
+                         "factor of baseline (raise on noisy CI machines)")
+    ap.add_argument("--rtol", type=float, default=0.12,
+                    help="--compare: relative tolerance on quality fields")
+    ap.add_argument("--atol", type=float, default=0.02,
+                    help="--compare: absolute tolerance on quality fields")
+    ap.add_argument("--trajectory", default=None, metavar="PATH",
+                    help="append this run's rows to a schema-versioned "
+                         "JSONL trajectory file")
     args = ap.parse_args()
     trials3 = 10 if args.full else 4
     trials4 = 100 if args.full else 3
     trials5 = 100 if args.full else 50
+
+    selected = None
+    if args.rows is not None:
+        selected = {s.strip() for s in args.rows.split(",") if s.strip()}
+        unknown = selected - set(ROW_GROUPS)
+        if unknown:
+            ap.error(f"unknown --rows group(s): {', '.join(sorted(unknown))}"
+                     f" (valid: {', '.join(ROW_GROUPS)})")
+
+    def want(group: str) -> bool:
+        return selected is None or group in selected
 
     emit = _Emitter()
     print("name,us_per_call,derived")
@@ -74,132 +143,206 @@ def main() -> None:
     from repro import obs
     tracer = obs.enable()
 
-    from benchmarks import fig3_validation, fig4_scale, fig5_realworld
-    from benchmarks import kernels_micro, roofline, scenarios
+    if want("fig3_validation"):
+        from benchmarks import fig3_validation
+        t0 = time.perf_counter()
+        s3 = fig3_validation.run(trials=trials3, verbose=False,
+                                 literal_agp=args.full)
+        dt = (time.perf_counter() - t0) * 1e6 / trials3
+        emit("fig3_validation", dt,
+             f"egp_ratio={s3['egp']['mean_ratio']:.3f}"
+             f";agp_ratio={s3['agp']['mean_ratio']:.3f}"
+             f";sck_ratio={s3['sck']['mean_ratio']:.3f}"
+             f";paper=0.904/0.900/0.607")
 
-    t0 = time.perf_counter()
-    s3 = fig3_validation.run(trials=trials3, verbose=False,
-                             literal_agp=args.full)
-    dt = (time.perf_counter() - t0) * 1e6 / trials3
-    emit("fig3_validation", dt,
-         f"egp_ratio={s3['egp']['mean_ratio']:.3f}"
-         f";agp_ratio={s3['agp']['mean_ratio']:.3f}"
-         f";sck_ratio={s3['sck']['mean_ratio']:.3f}"
-         f";paper=0.904/0.900/0.607")
+    if want("fig4_scale"):
+        from benchmarks import fig4_scale
+        t0 = time.perf_counter()
+        s4 = fig4_scale.run(trials=trials4, verbose=False)
+        dt = (time.perf_counter() - t0) * 1e6 / trials4
+        emit("fig4_scale", dt,
+             f"egp_over_sck={s4['egp_over_sck']:.2f}"
+             f";paper=~1.5x;egp_ratio={s4['egp'].get('mean_ratio', -1):.3f}")
 
-    t0 = time.perf_counter()
-    s4 = fig4_scale.run(trials=trials4, verbose=False)
-    dt = (time.perf_counter() - t0) * 1e6 / trials4
-    emit("fig4_scale", dt,
-         f"egp_over_sck={s4['egp_over_sck']:.2f}"
-         f";paper=~1.5x;egp_ratio={s4['egp'].get('mean_ratio', -1):.3f}")
+    if want("fig5_realworld"):
+        from benchmarks import fig5_realworld
+        t0 = time.perf_counter()
+        s5 = fig5_realworld.run(trials=trials5, verbose=False)
+        dt = (time.perf_counter() - t0) * 1e6 / trials5
+        mobile = s5["placements"]["egp"].get("MobileNet", 0)
+        total = sum(s5["placements"]["egp"].values())
+        emit("fig5_realworld", dt,
+             f"egp_mobilenet={mobile}/{total}"
+             f";paper=exclusively_mobilenet"
+             f";qos_egp={s5['mean_qos']['egp']:.3f}")
 
-    t0 = time.perf_counter()
-    s5 = fig5_realworld.run(trials=trials5, verbose=False)
-    dt = (time.perf_counter() - t0) * 1e6 / trials5
-    mobile = s5["placements"]["egp"].get("MobileNet", 0)
-    total = sum(s5["placements"]["egp"].values())
-    emit("fig5_realworld", dt,
-         f"egp_mobilenet={mobile}/{total}"
-         f";paper=exclusively_mobilenet"
-         f";qos_egp={s5['mean_qos']['egp']:.3f}")
+    if want("serving_horizon"):
+        from benchmarks import serving_horizon
+        t0 = time.perf_counter()
+        sv = serving_horizon.run(
+            seeds=(0,) if not args.full else (0, 1, 2, 3),
+            n_ticks=3 if not args.full else 6, verbose=False)
+        dt = (time.perf_counter() - t0) * 1e6 / sv["n_runs"]
+        edf = sv["per_cell"][("flash_crowd", "edf")]
+        fcfs = sv["per_cell"][("flash_crowd", "fcfs")]
+        steady = sv["per_cell"][("steady", "edf")]
+        emit("serving_horizon", dt,
+             f"flash_qos_edf={edf['mean_realized_qos']:.4f}"
+             f";flash_miss_edf={edf['miss_rate']:.3f}"
+             f";flash_miss_fcfs={fcfs['miss_rate']:.3f}"
+             f";steady_qos_edf={steady['mean_realized_qos']:.4f}"
+             f";dropped={edf['dropped']}")
 
-    from benchmarks import serving_horizon
-    t0 = time.perf_counter()
-    sv = serving_horizon.run(seeds=(0,) if not args.full else (0, 1, 2, 3),
-                             n_ticks=3 if not args.full else 6,
-                             verbose=False)
-    dt = (time.perf_counter() - t0) * 1e6 / sv["n_runs"]
-    edf = sv["per_cell"][("flash_crowd", "edf")]
-    fcfs = sv["per_cell"][("flash_crowd", "fcfs")]
-    steady = sv["per_cell"][("steady", "edf")]
-    emit("serving_horizon", dt,
-         f"flash_qos_edf={edf['mean_realized_qos']:.4f}"
-         f";flash_miss_edf={edf['miss_rate']:.3f}"
-         f";flash_miss_fcfs={fcfs['miss_rate']:.3f}"
-         f";steady_qos_edf={steady['mean_realized_qos']:.4f}"
-         f";dropped={edf['dropped']}")
+    if want("tuning_fit"):
+        from benchmarks import tuning
+        t0 = time.perf_counter()
+        tn = tuning.run(seeds=(0,) if not args.full else (0, 1),
+                        n_ticks=2 if not args.full else 4, verbose=False)
+        dt = (time.perf_counter() - t0) * 1e6 / tn["n_items"]
+        flash = tn["table"]["flash_crowd"]
+        emit("tuning_fit", dt,
+             f"flash_sw={flash['switching_cost']:g}"
+             f";flash_stick={flash['stickiness']:g}"
+             f";flash_qos={flash['mean_qos']:.4f}"
+             f";frontier={tn['frontier_sizes']['flash_crowd']}"
+             f";fit_us={tn['fit_s'] * 1e6:.0f}")
 
-    from benchmarks import tuning
-    t0 = time.perf_counter()
-    tn = tuning.run(seeds=(0,) if not args.full else (0, 1),
-                    n_ticks=2 if not args.full else 4, verbose=False)
-    dt = (time.perf_counter() - t0) * 1e6 / tn["n_items"]
-    flash = tn["table"]["flash_crowd"]
-    emit("tuning_fit", dt,
-         f"flash_sw={flash['switching_cost']:g}"
-         f";flash_stick={flash['stickiness']:g}"
-         f";flash_qos={flash['mean_qos']:.4f}"
-         f";frontier={tn['frontier_sizes']['flash_crowd']}"
-         f";fit_us={tn['fit_s'] * 1e6:.0f}")
+    if want("fleet_scaling"):
+        from benchmarks import fleet_scaling
+        t0 = time.perf_counter()
+        fl = fleet_scaling.run(
+            worker_counts=(1, 2, 4),
+            seeds=(0,) if not args.full else (0, 1, 2, 3),
+            n_ticks=2 if not args.full else 4, verbose=False)
+        dt = (time.perf_counter() - t0) * 1e6 / max(fl["n_items"], 1)
+        per_n = fl["workers"]
+        emit("fleet_scaling", dt,
+             f"items={fl['n_items']}"
+             + "".join(f";w{n}_items_per_s={per_n[n]['items_per_s']:.2f}"
+                       for n in sorted(per_n))
+             + f";single_items_per_s={fl['single_items_per_s']:.2f}")
 
-    from benchmarks import fleet_scaling
-    t0 = time.perf_counter()
-    fl = fleet_scaling.run(
-        worker_counts=(1, 2, 4),
-        seeds=(0,) if not args.full else (0, 1, 2, 3),
-        n_ticks=2 if not args.full else 4, verbose=False)
-    dt = (time.perf_counter() - t0) * 1e6 / max(fl["n_items"], 1)
-    per_n = fl["workers"]
-    emit("fleet_scaling", dt,
-         f"items={fl['n_items']}"
-         + "".join(f";w{n}_items_per_s={per_n[n]['items_per_s']:.2f}"
-                   for n in sorted(per_n))
-         + f";single_items_per_s={fl['single_items_per_s']:.2f}")
+    if want("scenario_sweep"):
+        from benchmarks import scenarios
+        sc = scenarios.run(seeds=(0, 1) if not args.full else (0, 1, 2, 3),
+                           n_ticks=4 if not args.full else 8, verbose=False)
+        # us_per_call is the engine's chunked accelerator evaluation (incl.
+        # compile), not the host-side validation loop scenarios.run also
+        # does.
+        dt = sc["batched_s"] * 1e6 / sc["n_instances"]
+        dyn = sc["dynamic"]["flash_crowd"]
+        emit("scenario_sweep", dt,
+             f"n={sc['n_instances']}"
+             f";scenarios={sc['n_scenarios']}"
+             f";max_abs_diff={sc['max_abs_diff']:.1e}"
+             f";host_us={sc['host_s'] * 1e6 / sc['n_instances']:.0f}"
+             f";hyst_minus_greedy={dyn['hysteresis'] - dyn['greedy']:.1f}")
 
-    sc = scenarios.run(seeds=(0, 1) if not args.full else (0, 1, 2, 3),
-                       n_ticks=4 if not args.full else 8, verbose=False)
-    # us_per_call is the engine's chunked accelerator evaluation (incl.
-    # compile), not the host-side validation loop scenarios.run also does.
-    dt = sc["batched_s"] * 1e6 / sc["n_instances"]
-    dyn = sc["dynamic"]["flash_crowd"]
-    emit("scenario_sweep", dt,
-         f"n={sc['n_instances']}"
-         f";scenarios={sc['n_scenarios']}"
-         f";max_abs_diff={sc['max_abs_diff']:.1e}"
-         f";host_us={sc['host_s'] * 1e6 / sc['n_instances']:.0f}"
-         f";hyst_minus_greedy={dyn['hysteresis'] - dyn['greedy']:.1f}")
+    if want("kernels"):
+        from benchmarks import kernels_micro
+        for name, us, derived in kernels_micro.run(verbose=False):
+            emit(f"kernel_{name}", us, derived)
 
-    for name, us, derived in kernels_micro.run(verbose=False):
-        emit(f"kernel_{name}", us, derived)
+    if want("obs_overhead"):
+        from benchmarks import serving_horizon
+        ov = serving_horizon.obs_overhead()
+        emit("obs_overhead", ov["noop_span_ns"] / 1e3,
+             f"disabled_pct={ov['disabled_pct']:.4f}"
+             f";enabled_pct={ov['enabled_pct']:.2f}"
+             f";events={ov['n_events']}"
+             f";noop_span_ns={ov['noop_span_ns']:.0f}")
 
-    ov = serving_horizon.obs_overhead()
-    emit("obs_overhead", ov["noop_span_ns"] / 1e3,
-         f"disabled_pct={ov['disabled_pct']:.4f}"
-         f";enabled_pct={ov['enabled_pct']:.2f}"
-         f";events={ov['n_events']}"
-         f";noop_span_ns={ov['noop_span_ns']:.0f}")
+    if want("roofline_table"):
+        from benchmarks import roofline
+        rows = roofline.build(verbose=False)
+        ok_rows = [r for r in rows if "skip" not in r]
+        if ok_rows:
+            worst = min(ok_rows, key=lambda r: r["roofline_fraction"])
+            best = max(ok_rows, key=lambda r: r["roofline_fraction"])
+            import numpy as np
+            med = float(np.median([r["roofline_fraction"]
+                                   for r in ok_rows]))
+            emit("roofline_table", 0,
+                 f"cells={len(ok_rows)};median_fraction={med:.3f}"
+                 f";worst={worst['arch']}/{worst['shape']}"
+                 f"={worst['roofline_fraction']:.3f}"
+                 f";best={best['arch']}/{best['shape']}"
+                 f"={best['roofline_fraction']:.3f}")
+        else:
+            emit("roofline_table", 0,
+                 "no_dryrun_artifacts=1;hint=run repro.launch.dryrun")
 
-    rows = roofline.build(verbose=False)
-    ok_rows = [r for r in rows if "skip" not in r]
-    if ok_rows:
-        worst = min(ok_rows, key=lambda r: r["roofline_fraction"])
-        best = max(ok_rows, key=lambda r: r["roofline_fraction"])
-        import numpy as np
-        med = float(np.median([r["roofline_fraction"] for r in ok_rows]))
-        emit("roofline_table", 0,
-             f"cells={len(ok_rows)};median_fraction={med:.3f}"
-             f";worst={worst['arch']}/{worst['shape']}={worst['roofline_fraction']:.3f}"
-             f";best={best['arch']}/{best['shape']}={best['roofline_fraction']:.3f}")
-    else:
-        emit("roofline_table", 0,
-             "no_dryrun_artifacts=1;hint=run repro.launch.dryrun")
-
+    doc = {
+        "bench_schema": BENCH_SCHEMA_VERSION,
+        "full": bool(args.full),
+        "rows": emit.rows,
+        "obs": {
+            "histograms": tracer.metrics.histograms(),
+            "counters": dict(tracer.counters),
+            "n_spans": tracer.n_spans,
+        },
+    }
     if args.json:
         path = Path(args.json)
         path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps({
-            "bench_schema": BENCH_SCHEMA_VERSION,
+        path.write_text(json.dumps(doc, indent=1))
+
+    if args.trajectory:
+        path = Path(args.trajectory)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        rec = {
+            "bench_traj_schema": BENCH_TRAJ_SCHEMA_VERSION,
+            "t": round(time.time(), 3),
+            "git_rev": _git_rev(),
             "full": bool(args.full),
-            "rows": emit.rows,
-            "obs": {
-                "histograms": tracer.metrics.histograms(),
-                "counters": dict(tracer.counters),
-                "n_spans": tracer.n_spans,
-            },
-        }, indent=1))
+            "rows": [{"name": r["name"], "us_per_call": r["us_per_call"],
+                      "fields": r["fields"]} for r in emit.rows],
+        }
+        with path.open("a") as fh:
+            fh.write(json.dumps(rec, separators=(",", ":"),
+                                sort_keys=True) + "\n")
+        print(f"[bench] appended {len(emit.rows)} row(s) to {path}",
+              file=sys.stderr)
+
+    rc = 0
+    if args.compare:
+        from repro.obs.slo import compare_bench
+        base = json.loads(Path(args.compare).read_text())
+        have = int(base.get("bench_schema", -1))
+        if have != BENCH_SCHEMA_VERSION:
+            print(f"[bench] baseline {args.compare} has bench_schema "
+                  f"v{have}, this code writes v{BENCH_SCHEMA_VERSION}",
+                  file=sys.stderr)
+            rc = 3
+        else:
+            cmp_rows = None
+            if selected is not None:
+                cmp_rows = set()
+                for group in selected:
+                    if group == "kernels":
+                        cmp_rows |= {r["name"] for r in emit.rows
+                                     if r["name"].startswith("kernel_")}
+                    else:
+                        cmp_rows.add(group)
+            res = compare_bench(doc, base, max_slowdown=args.max_slowdown,
+                                rtol=args.rtol, atol=args.atol,
+                                rows=cmp_rows)
+            if res["violations"]:
+                print(f"[bench] REGRESSION vs {args.compare} "
+                      f"({len(res['violations'])} violation(s) over "
+                      f"{len(res['rows_checked'])} row(s)):",
+                      file=sys.stderr)
+                for v in res["violations"]:
+                    print(f"  {v}", file=sys.stderr)
+                rc = 3
+            else:
+                print(f"[bench] no regression vs {args.compare}: "
+                      f"{len(res['rows_checked'])} row(s), "
+                      f"{res['fields_checked']} field(s) checked",
+                      file=sys.stderr)
     obs.disable()
+    return rc
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

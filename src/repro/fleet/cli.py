@@ -15,7 +15,9 @@ store::
     python -m repro.fleet worker --root experiments/fleet/demo
 
     # 3. watch / recover / combine
-    python -m repro.fleet status --root experiments/fleet/demo
+    python -m repro.fleet status --root experiments/fleet/demo   # --watch
+    #    (with REPRO_OBS_STREAM set, --watch tails the workers' live
+    #     telemetry streams under <root>/stream/ — see repro.obs.stream)
     python -m repro.fleet reap   --root experiments/fleet/demo
     python -m repro.fleet merge  --root experiments/fleet/demo \\
         --store experiments/sweeps/demo
@@ -58,8 +60,16 @@ def _cmd_plan(args: argparse.Namespace) -> int:
 
 def _cmd_worker(args: argparse.Namespace) -> int:
     from repro import obs
+    from .queue import default_owner
     obs.enable_from_env()  # REPRO_OBS=1 propagated by spawn_local_workers
-    summary = run_worker(args.root, owner=args.owner, ttl=args.ttl,
+    owner = args.owner or default_owner()
+    # REPRO_OBS_STREAM=1 → per-worker JSONL under <root>/stream/ (the
+    # dashboard and `status --watch` tail these); explicit specs
+    # (unix:/tcp:/path) are honored as given.
+    obs.enable_stream_from_env(
+        default_path=str(Path(args.root) / "stream" / f"{owner}.jsonl"),
+        source=owner)
+    summary = run_worker(args.root, owner=owner, ttl=args.ttl,
                          max_tasks=args.max_tasks,
                          memory_budget_mb=args.memory_budget_mb,
                          verbose=args.verbose)
@@ -69,8 +79,7 @@ def _cmd_worker(args: argparse.Namespace) -> int:
     return 0
 
 
-def _cmd_status(args: argparse.Namespace) -> int:
-    out = status(args.root, target_store=args.store)
+def _print_status(out: dict) -> None:
     q = out["queue"]
     print(f"[fleet] queue: {q['pending']} pending, {q['leased']} leased "
           f"({q['expired']} expired), {q['done']} done"
@@ -101,7 +110,59 @@ def _cmd_status(args: argparse.Namespace) -> int:
         missing = out.get("target_missing")
         print(f"  target store: {out['target_items']} item(s)"
               + (f", {missing} missing" if missing is not None else ""))
+
+
+def _cmd_status(args: argparse.Namespace) -> int:
+    if getattr(args, "watch", False):
+        return _watch_status(args)
+    out = status(args.root, target_store=args.store)
+    _print_status(out)
     if args.json:
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json).write_text(json.dumps(out, indent=1))
+    return 0
+
+
+def _watch_status(args: argparse.Namespace) -> int:
+    """``status --watch``: live refresh until the queue drains.
+
+    Prefers the workers' live telemetry streams (``<root>/stream/*.jsonl``
+    — present when the fleet runs with ``REPRO_OBS_STREAM``); without
+    them it degrades to plain heartbeat polling of the telemetry files,
+    exactly like repeated ``status`` calls. Exits 0 when no pending or
+    leased work remains.
+    """
+    import time
+
+    from repro.obs.dash import DashState, render
+    from repro.obs.stream import StreamError, read_stream
+
+    root = Path(args.root)
+    interval = max(float(getattr(args, "interval", 2.0)), 0.05)
+    clear = sys.stdout.isatty()
+    out = None
+    while True:
+        out = status(args.root, target_store=args.store)
+        if clear:
+            sys.stdout.write("\x1b[H\x1b[2J")
+        _print_status(out)
+        streams = sorted((root / "stream").glob("*.jsonl"))
+        if streams:
+            state = DashState()
+            for p in streams:
+                try:
+                    for frame in read_stream(str(p), follow=False):
+                        state.update(frame)
+                except (StreamError, OSError):
+                    continue  # torn tail of a live file; retry next tick
+            if state.n_frames:
+                print()
+                print(render(state))
+        q = out["queue"]
+        if q["pending"] == 0 and q["leased"] == 0:
+            break
+        time.sleep(interval)
+    if args.json and out is not None:
         Path(args.json).parent.mkdir(parents=True, exist_ok=True)
         Path(args.json).write_text(json.dumps(out, indent=1))
     return 0
@@ -164,6 +225,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     st.add_argument("--root", required=True)
     st.add_argument("--store", default=None)
     st.add_argument("--json", default=None, metavar="PATH")
+    st.add_argument("--watch", action="store_true",
+                    help="refresh until the queue drains; tails the "
+                         "workers' live streams (<root>/stream/*.jsonl) "
+                         "when present, else polls heartbeats")
+    st.add_argument("--interval", type=float, default=2.0,
+                    help="--watch refresh period in seconds")
     st.set_defaults(fn=_cmd_status)
 
     rp = sub.add_parser("reap", help="requeue expired leases (crash "

@@ -165,6 +165,13 @@ def status(fleet_root, *, target_store=None,
     tele = read_telemetry(fleet_root, stale_s=stale_s)
     out["telemetry"] = tele["workers"]
     out["rate_items_per_s"] = tele["rate_items_per_s"]
+    # Live-stream awareness: workers launched with REPRO_OBS_STREAM leave
+    # one JSONL stream each under <root>/stream/ — `status --watch` and
+    # the dashboard tail these instead of polling heartbeats.
+    stream_dir = fleet_root / "stream"
+    out["stream_files"] = sorted(
+        p.name for p in stream_dir.glob("*.jsonl")) \
+        if stream_dir.is_dir() else []
     out["eta_s"] = (round(remaining / out["rate_items_per_s"], 3)
                     if remaining and out["rate_items_per_s"] > 0 else None)
     try:

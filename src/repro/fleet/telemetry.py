@@ -19,6 +19,11 @@ Record fields (``telemetry_schema`` = :data:`TELEMETRY_SCHEMA_VERSION`):
 ``items_per_s``        lifetime items/s (items_done over active wall time)
 ``last_task``          name of the most recently completed task
 ``last_task_wall_s``   wall seconds of that task
+``pid``                the worker process id
+``anchor_mono_ns``     ``time.perf_counter_ns()`` sampled at the same
+                       instant as ``updated_at`` — a wall/monotonic
+                       anchor pair used by :mod:`repro.obs.aggregate`
+                       to align per-worker trace clocks when stitching
 
 A worker that is SIGKILLed simply stops updating its file; readers treat
 records older than their staleness window as dead and exclude them from
@@ -103,6 +108,8 @@ class WorkerTelemetry:
             "last_task": self._last_task,
             "last_task_wall_s": None if self._last_task_wall_s is None
             else round(self._last_task_wall_s, 6),
+            "pid": os.getpid(),
+            "anchor_mono_ns": time.perf_counter_ns(),
         }
 
     def _publish(self, state: str) -> None:

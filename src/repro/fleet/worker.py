@@ -34,6 +34,7 @@ import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
+from repro import obs
 from repro.sweeps.spec import SweepSpec
 from repro.sweeps.shard import run_sweep
 
@@ -195,6 +196,28 @@ def _worker_loop(queue: LeaseQueue, spec: SweepSpec, store_dir: Path,
         if telemetry is not None:
             telemetry.task_done(task.name, len(task.keys),
                                 time.perf_counter() - task_t0)
+        pub = obs.get_publisher()
+        if pub is not None:
+            # Live "worker" frame for the dashboard / `status --watch`.
+            # Pending *items* is an estimate (pending tasks × this
+            # worker's mean items/task) — the queue only counts tasks.
+            try:
+                n_pending = len(queue.pending())
+            except OSError:
+                n_pending = None
+            elapsed = time.perf_counter() - t0
+            pub.emit("worker", {
+                "owner": owner,
+                "task": task.name,
+                "tasks_done": len(executed),
+                "items_done": items,
+                "items_per_s": round(items / elapsed, 6)
+                if elapsed > 0 else 0.0,
+                "queue_pending_tasks": n_pending,
+                "queue_pending_items": None if n_pending is None
+                else int(round(n_pending * items / len(executed))),
+                "task_wall_s": round(time.perf_counter() - task_t0, 6),
+            })
         if verbose:
             state = "done" if completed else "done (lease was reaped)"
             print(f"[fleet:{owner}] {task.name}: {len(task.keys)} item(s) "
@@ -215,6 +238,7 @@ def _worker_loop(queue: LeaseQueue, spec: SweepSpec, store_dir: Path,
 
 def spawn_local_workers(fleet_root: os.PathLike | str, n: int, *,
                         ttl: float = DEFAULT_TTL_S,
+                        max_tasks: Optional[int] = None,
                         memory_budget_mb: Optional[float] = None,
                         quiet: bool = True,
                         silence: bool = False) -> List[subprocess.Popen]:
@@ -236,6 +260,8 @@ def spawn_local_workers(fleet_root: os.PathLike | str, n: int, *,
         cmd = [sys.executable, "-m", "repro.fleet", "worker",
                "--root", str(fleet_root), "--owner", f"local-{i}",
                "--ttl", str(ttl)]
+        if max_tasks is not None:
+            cmd += ["--max-tasks", str(max_tasks)]
         if memory_budget_mb is not None:
             cmd += ["--memory-budget-mb", str(memory_budget_mb)]
         if not quiet:

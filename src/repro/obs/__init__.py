@@ -25,18 +25,32 @@ Pallas kernel dispatchers (``kernel.*`` annotations).
 """
 from .metrics import (METRICS_SCHEMA_VERSION, Counter, Gauge, Histogram,
                       MetricsRegistry)
-from .trace import (DEFAULT_CAPACITY, OBS_SCHEMA_VERSION, Tracer, count,
-                    disable, enable, enable_from_env, enabled, get_tracer,
-                    load_artifact, sample, save, span, to_chrome_trace,
+from .trace import (DEFAULT_CAPACITY, OBS_SCHEMA_VERSION,
+                    READABLE_OBS_SCHEMAS, Tracer, count, disable, enable,
+                    enable_from_env, enabled, get_tracer, load_artifact,
+                    sample, save, span, to_chrome_trace,
                     validate_chrome_trace)
 from .jaxprof import (have_jax_profiler, kernel_span, named_scope,
                       profile_trace)
+from .stream import (STREAM_SCHEMA_VERSION, StreamPublisher, disable_stream,
+                     enable_stream, enable_stream_from_env, get_publisher,
+                     publish, read_stream, stream_active)
+from .aggregate import (rollup_counters, rollup_metrics, stitch_fleet,
+                        stitch_traces)
+from .slo import (DEFAULT_SLOS, SLO, SLO_SCHEMA_VERSION, SLOReport,
+                  compare_bench, evaluate_slos, load_slos)
 
 __all__ = [
     "OBS_SCHEMA_VERSION", "METRICS_SCHEMA_VERSION", "DEFAULT_CAPACITY",
+    "READABLE_OBS_SCHEMAS", "STREAM_SCHEMA_VERSION", "SLO_SCHEMA_VERSION",
     "Tracer", "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "enable", "disable", "enabled", "get_tracer", "enable_from_env",
     "span", "count", "sample", "save",
     "load_artifact", "to_chrome_trace", "validate_chrome_trace",
     "kernel_span", "named_scope", "profile_trace", "have_jax_profiler",
+    "StreamPublisher", "enable_stream", "disable_stream", "stream_active",
+    "get_publisher", "publish", "read_stream", "enable_stream_from_env",
+    "stitch_traces", "stitch_fleet", "rollup_metrics", "rollup_counters",
+    "SLO", "SLOReport", "DEFAULT_SLOS", "load_slos", "evaluate_slos",
+    "compare_bench",
 ]

@@ -16,9 +16,22 @@ Operates on the artifacts the rest of the repo produces::
     # live rate/ETA of a running fleet (worker telemetry + queue)
     python -m repro.obs tail --root experiments/fleet/demo --interval 2
 
+    # live terminal dashboard over telemetry streams (REPRO_OBS_STREAM)
+    python -m repro.obs dash --stream /tmp/stream.jsonl
+    python -m repro.obs dash --root experiments/fleet/demo   # all workers
+
+    # stitch every worker artifact of a fleet run into ONE Chrome trace
+    python -m repro.obs stitch --root experiments/fleet/demo \\
+        --out /tmp/fleet_chrome.json
+
+    # evaluate SLOs against a stream / artifact / benchmark JSON
+    python -m repro.obs slo --stream /tmp/stream.jsonl
+    python -m repro.obs slo --bench BENCH_latest.json --spec slos.json
+
 Artifacts come from ``python -m repro.sweeps ... --obs PATH``, from
 ``REPRO_OBS=1 REPRO_OBS_DIR=...`` in any instrumented process (fleet
-workers inherit it), or from ``Tracer.save`` directly.
+workers inherit it), or from ``Tracer.save`` directly. Streams come from
+``REPRO_OBS_STREAM`` / ``--stream`` (see :mod:`repro.obs.stream`).
 """
 from __future__ import annotations
 
@@ -171,6 +184,76 @@ def _cmd_tail(args: argparse.Namespace) -> int:
         time.sleep(args.interval)
 
 
+def _dash_specs(args: argparse.Namespace) -> List[str]:
+    """--stream specs plus every per-worker stream under --root."""
+    specs = list(args.stream or [])
+    if getattr(args, "root", None):
+        specs += [str(p) for p in
+                  sorted((Path(args.root) / "stream").glob("*.jsonl"))]
+    return specs
+
+
+def _cmd_dash(args: argparse.Namespace) -> int:
+    from .dash import run_dash
+    from .slo import DEFAULT_SLOS, load_slos
+
+    specs = _dash_specs(args)
+    if not specs:
+        print("[obs] dash: no streams — pass --stream SPEC and/or --root "
+              "FLEET_ROOT (workers publish streams when REPRO_OBS_STREAM "
+              "is set)", file=sys.stderr)
+        return 2
+    slos = load_slos(args.spec) if args.spec else DEFAULT_SLOS
+    return run_dash(specs, interval=args.interval, timeout_s=args.timeout,
+                    once=args.once, max_frames=args.max_frames, slos=slos,
+                    clear=not args.no_clear and sys.stdout.isatty())
+
+
+def _cmd_stitch(args: argparse.Namespace) -> int:
+    from .aggregate import stitch_fleet
+
+    summary = stitch_fleet(args.root, out=args.out)
+    print(f"[obs] stitched {summary['n_artifacts']} worker artifact(s) "
+          f"into {summary['n_events']} validated event(s)"
+          + (f" -> {args.out}" if args.out else ""))
+    for label, pid in sorted(summary["workers"].items()):
+        print(f"  {label:<28} pid {pid}")
+    hists = [m for m in summary["metrics"] if m.get("kind") == "histogram"]
+    if hists:
+        print(f"  rolled-up histograms: "
+              + ", ".join(sorted({m['name'] for m in hists})))
+    if args.json:
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        doc = {k: v for k, v in summary.items() if k != "chrome_trace"}
+        Path(args.json).write_text(json.dumps(doc, indent=1))
+    return 0
+
+
+def _cmd_slo(args: argparse.Namespace) -> int:
+    from .slo import DEFAULT_SLOS, evaluate_slos, load_slos
+    from .stream import read_stream
+
+    slos = load_slos(args.spec) if args.spec else list(DEFAULT_SLOS)
+    frames: List[Dict[str, Any]] = []
+    for spec in args.stream or []:
+        frames.extend(read_stream(spec, follow=False))
+    metrics = counters = None
+    if args.artifact:
+        doc = load_artifact(args.artifact)
+        metrics = doc.get("metrics", [])
+        counters = doc.get("counters", {})
+    bench = json.loads(Path(args.bench).read_text()) if args.bench else None
+    reports = evaluate_slos(slos, frames=frames, metrics=metrics,
+                            counters=counters, bench=bench)
+    for r in reports:
+        print(r.line())
+    failed = [r for r in reports if not r.ok]
+    if failed:
+        print(f"[obs] {len(failed)} SLO(s) violated", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs",
@@ -197,6 +280,48 @@ def main(argv: Optional[List[str]] = None) -> int:
     tl.add_argument("--once", action="store_true",
                     help="print one status line and exit")
     tl.set_defaults(fn=_cmd_tail)
+
+    da = sub.add_parser("dash", help="live terminal dashboard over "
+                                     "telemetry streams")
+    da.add_argument("--stream", action="append", metavar="SPEC",
+                    help="stream to tail: JSONL path, unix:/path, or "
+                         "tcp:host:port; repeatable")
+    da.add_argument("--root", default=None,
+                    help="fleet root — tails every <root>/stream/*.jsonl")
+    da.add_argument("--spec", default=None, metavar="PATH",
+                    help="SLO spec JSON (default: built-in serving SLOs)")
+    da.add_argument("--interval", type=float, default=1.0)
+    da.add_argument("--timeout", type=float, default=10.0,
+                    help="idle seconds before a stream is considered over")
+    da.add_argument("--once", action="store_true",
+                    help="drain what is buffered, render one screen, exit "
+                         "(exit 2 when no frames arrived — the CI smoke)")
+    da.add_argument("--max-frames", type=int, default=None)
+    da.add_argument("--no-clear", action="store_true")
+    da.set_defaults(fn=_cmd_dash)
+
+    sti = sub.add_parser("stitch", help="merge a fleet's per-worker obs "
+                                        "artifacts into one Chrome trace")
+    sti.add_argument("--root", required=True, help="fleet root directory")
+    sti.add_argument("--out", default=None, metavar="PATH",
+                     help="write the stitched Chrome trace JSON here")
+    sti.add_argument("--json", default=None, metavar="PATH",
+                     help="write the stitch summary (workers, counters, "
+                          "rolled-up metrics) here")
+    sti.set_defaults(fn=_cmd_stitch)
+
+    sl = sub.add_parser("slo", help="evaluate SLOs against streams, an "
+                                    "artifact, or a benchmark JSON; exit "
+                                    "1 on violation")
+    sl.add_argument("--spec", default=None, metavar="PATH",
+                    help="SLO spec JSON (default: built-in serving SLOs)")
+    sl.add_argument("--stream", action="append", metavar="SPEC",
+                    help="stream(s) to evaluate tick/metrics frames from")
+    sl.add_argument("--artifact", default=None, metavar="PATH",
+                    help="saved obs artifact for hist./counter. metrics")
+    sl.add_argument("--bench", default=None, metavar="PATH",
+                    help="benchmarks/run.py --json document for bench.*")
+    sl.set_defaults(fn=_cmd_slo)
 
     args = ap.parse_args(argv)
     try:

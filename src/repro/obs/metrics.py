@@ -177,6 +177,43 @@ class Histogram:
             **self.summary(),
         }
 
+    @classmethod
+    def from_record(cls, rec: Mapping[str, Any]) -> "Histogram":
+        """Rebuild a histogram from its :meth:`record` dict — the inverse
+        the cross-worker rollup needs (bucket counts are exact; ``sum`` is
+        the stored float)."""
+        h = cls(growth=float(rec.get("growth", DEFAULT_GROWTH)),
+                min_value=float(rec.get("min_value", 1e-9)))
+        h._buckets = {int(i): int(n)
+                      for i, n in rec.get("buckets", {}).items()}
+        h.count = int(rec.get("count", sum(h._buckets.values())))
+        h.sum = float(rec.get("sum", 0.0))
+        if h.count:
+            h.min = float(rec["min"])
+            h.max = float(rec["max"])
+        return h
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Bucket-wise sum of ``other`` into ``self`` (min/max union).
+
+        Exact in bucket arithmetic: merging per-worker histograms yields
+        byte-identical bucket counts, count, min, and max to histogramming
+        the concatenated samples in one process (``sum`` is float addition
+        and may differ in the last ulp). Bucket layouts must match.
+        """
+        if (other.growth, other.min_value) != (self.growth, self.min_value):
+            raise ValueError(
+                f"cannot merge histograms with different bucket layouts: "
+                f"(growth={self.growth}, min_value={self.min_value}) vs "
+                f"(growth={other.growth}, min_value={other.min_value})")
+        for i, n in other._buckets.items():
+            self._buckets[i] = self._buckets.get(i, 0) + n
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
+
 
 class MetricsRegistry:
     """Labeled series factory + versioned snapshot/JSONL export."""
@@ -223,6 +260,56 @@ class MetricsRegistry:
     def to_jsonl(self) -> str:
         return "".join(json.dumps(rec, separators=(",", ":")) + "\n"
                        for rec in self.snapshot())
+
+    @classmethod
+    def from_snapshot(cls, records: Iterable[Mapping[str, Any]]
+                      ) -> "MetricsRegistry":
+        """Rebuild a registry from :meth:`snapshot` records (version-checked
+        per record) — what lets the fleet stitcher roll up the ``metrics``
+        section of saved per-worker obs artifacts."""
+        reg = cls()
+        for rec in records:
+            have = int(rec.get("metrics_schema", -1))
+            if have != METRICS_SCHEMA_VERSION:
+                raise ValueError(f"metrics record schema v{have}, this "
+                                 f"code reads v{METRICS_SCHEMA_VERSION}")
+            kind, name = rec["kind"], rec["name"]
+            labels = dict(rec.get("labels", {}))
+            if kind == "counter":
+                reg.counter(name, **labels).inc(float(rec["value"]))
+            elif kind == "gauge":
+                reg.gauge(name, **labels).set(float(rec["value"]))
+            elif kind == "histogram":
+                key = ("histogram", str(name), _label_key(labels))
+                reg._series[key] = Histogram.from_record(rec)
+            else:
+                raise ValueError(f"unknown metrics record kind {kind!r}")
+        return reg
+
+    def merge(self, other: "MetricsRegistry") -> "MetricsRegistry":
+        """Roll ``other`` into ``self``: counters add, histograms merge
+        bucket-wise (exact — see :meth:`Histogram.merge`), gauges keep
+        ``other``'s value when it is set (last-writer-wins across the
+        merge order the caller chooses)."""
+        for key, series in other._series.items():
+            kind = key[0]
+            mine = self._series.get(key)
+            if mine is None:
+                if kind == "counter":
+                    mine = self._series[key] = Counter()
+                elif kind == "gauge":
+                    mine = self._series[key] = Gauge()
+                else:
+                    mine = self._series[key] = Histogram(
+                        series.growth, series.min_value)
+            if kind == "counter":
+                mine.inc(series.value)
+            elif kind == "gauge":
+                if not math.isnan(series.value):
+                    mine.set(series.value)
+            else:
+                mine.merge(series)
+        return self
 
     def histograms(self, name: Optional[str] = None
                    ) -> Dict[str, Dict[str, float]]:

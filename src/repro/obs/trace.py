@@ -43,6 +43,7 @@ from .metrics import MetricsRegistry
 
 __all__ = [
     "OBS_SCHEMA_VERSION",
+    "READABLE_OBS_SCHEMAS",
     "DEFAULT_CAPACITY",
     "Tracer",
     "enable",
@@ -60,7 +61,14 @@ __all__ = [
 ]
 
 #: Version stamp of the raw obs artifact (``Tracer.snapshot()`` output).
-OBS_SCHEMA_VERSION = 1
+#: v2 added the ``anchor`` wall/monotonic clock pair that lets
+#: :mod:`repro.obs.aggregate` align traces from different processes onto
+#: one timeline; v1 artifacts still load (stitching then falls back to
+#: fleet telemetry heartbeat anchors, or start-alignment).
+OBS_SCHEMA_VERSION = 2
+
+#: Artifact schema versions :func:`load_artifact` accepts.
+READABLE_OBS_SCHEMAS = (1, 2)
 
 #: Default ring-buffer capacity (spans and gauge samples each). At ~26
 #: bytes/span this is ~1.7 MB of preallocated buffer — hours of per-tick
@@ -259,9 +267,15 @@ class Tracer:
                 slot = (base + row) % self.capacity
                 if slot in self._s_args:
                     args[str(row)] = self._s_args[slot]
+            # wall/monotonic pair sampled under the same lock: both clocks
+            # advance at wall rate, so the offset (wall_ns − mono_ns) is a
+            # process constant and any capture time yields the same
+            # cross-process alignment (to clock-sync precision)
+            anchor = {"wall_ns": time.time_ns(), "mono_ns": self._clock()}
             return {
                 "obs_schema": OBS_SCHEMA_VERSION,
                 "clock": "perf_counter_ns",
+                "anchor": anchor,
                 "names": list(self._names),
                 "spans": {
                     "name": s_name.tolist(), "t0_ns": s_t0.tolist(),
@@ -422,9 +436,9 @@ def load_artifact(path) -> Dict[str, Any]:
     with open(path) as f:
         doc = json.load(f)
     have = int(doc.get("obs_schema", -1))
-    if have != OBS_SCHEMA_VERSION:
+    if have not in READABLE_OBS_SCHEMAS:
         raise ValueError(f"{path}: obs artifact schema v{have}, this code "
-                         f"reads v{OBS_SCHEMA_VERSION}")
+                         f"reads v{list(READABLE_OBS_SCHEMAS)}")
     return doc
 
 

@@ -301,7 +301,11 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
     ``kernel.qos_matrix_np`` span inside placement, queue-depth and
     in-flight gauge samples at every tick boundary, realized-QoS gauge
     samples, and per-request latency histograms labeled by (scenario,
-    policy).
+    policy). When a live stream publisher is installed
+    (:mod:`repro.obs.stream`, ``REPRO_OBS_STREAM``), each tick also
+    emits a ``tick`` frame (provisional completed-window QoS/miss rate,
+    queue depth) and the run ends with a ``horizon`` summary frame —
+    same invariant: stream-on runs are byte-identical to stream-off.
     """
     with obs.span("horizon.run", scenario=config.scenario,
                   policy=config.policy, seed=config.seed):
@@ -333,6 +337,7 @@ def _run_horizon(config: HorizonConfig) -> HorizonResult:
     boundary: List[Tuple[int, int]] = []   # (queue_depth, in_flight) per tick
     uid = 0
     done_ptr = 0   # completions already fed back to the controller
+    stream_ptr = 0  # completions already published to the live stream
     for t in range(T):
         with obs.span("tick.materialize", tick=t):
             inst = sc.instance_at(config.seed, t,
@@ -398,6 +403,35 @@ def _run_horizon(config: HorizonConfig) -> HorizonResult:
                      "delta_max": float(inst.delta_max),
                      "requeued": n_requeued,
                      "stickiness": float(applied_stickiness)})
+
+        pub = obs.get_publisher()
+        if pub is not None:
+            # live tick frame: provisional stats over what *completed*
+            # this tick (final arrival-attributed reports only exist
+            # after the drain) — a pure read of scheduler state, so the
+            # stream-on run stays byte-identical to stream-off
+            window = sched.completed[stream_ptr:]
+            stream_ptr = len(sched.completed)
+            window_qos = window_miss = None
+            if window:
+                w_lats = np.maximum(np.array(
+                    [r.finish - r.arrival for r in window]), 0.0)
+                w_qos, w_miss = realized_qos_np(
+                    w_lats, np.array([r.delta for r in window]),
+                    np.array([r.accuracy for r in window]),
+                    np.array([r.alpha for r in window]),
+                    float(inst.delta_max))
+                window_qos = float(w_qos.mean())
+                window_miss = float(w_miss.mean())
+            pub.emit("tick", {
+                "scenario": config.scenario, "seed": config.seed,
+                "policy": config.policy, "tick": t,
+                "submitted": int(inst.U), "dropped": meta[-1]["dropped"],
+                "queue_depth": boundary[-1][0],
+                "in_flight": boundary[-1][1],
+                "completed": len(window), "window_qos": window_qos,
+                "miss_rate": window_miss, "requeued": n_requeued,
+                "model_loads": loads})
 
         if feedback:
             # close the loop on what actually *completed* this tick — the
@@ -467,5 +501,20 @@ def _run_horizon(config: HorizonConfig) -> HorizonResult:
                   sum(r.deadline_misses for r in per_tick))
         obs.count("serving.requeued", sum(r.requeued for r in per_tick))
 
-    return HorizonResult(config=config, per_tick=per_tick,
-                         requests=[r for reqs in tick_reqs for r in reqs])
+    result = HorizonResult(config=config, per_tick=per_tick,
+                           requests=[r for reqs in tick_reqs for r in reqs])
+    pub = obs.get_publisher()
+    if pub is not None:
+        # end-of-run summary: the *final* arrival-attributed numbers the
+        # provisional tick frames converged toward
+        pub.emit("horizon", {
+            "scenario": config.scenario, "seed": config.seed,
+            "policy": config.policy, "n_ticks": T,
+            "submitted": result.submitted, "served": result.served,
+            "dropped": result.dropped,
+            "deadline_misses": result.deadline_misses,
+            "mean_realized_qos": result.mean_realized_qos,
+            "miss_rate": result.miss_rate})
+        if tracer is not None:
+            pub.emit_metrics(tracer)
+    return result

@@ -243,6 +243,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="enable repro.obs tracing and save the raw "
                          "artifact at PATH (inspect with python -m "
                          "repro.obs report/export)")
+    ap.add_argument("--stream", default=None, metavar="SPEC",
+                    help="publish live telemetry frames while the sweep "
+                         "runs: a JSONL file path, unix:/path, or "
+                         "tcp:host:port (watch with python -m repro.obs "
+                         "dash --stream SPEC); equivalent to setting "
+                         "REPRO_OBS_STREAM=SPEC")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
     if args.kind == "serving" and args.validate:
@@ -254,6 +260,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         obs.enable()
     else:
         obs.enable_from_env()  # REPRO_OBS=1 — same switch workers use
+    if args.stream:
+        obs.enable_stream(args.stream, source="sweeps")
+    else:
+        obs.enable_stream_from_env(source="sweeps")  # REPRO_OBS_STREAM
 
     spec = build_spec(args)
     store_dir = None

@@ -261,17 +261,20 @@ def _serving_metrics(per_tick, ticks: Sequence[int]
 
 
 def _note_chunk(executor: str, n_items: int, wall_s: float) -> None:
-    """Feed chunk throughput into the active tracer (no-op when off)."""
+    """Feed chunk throughput into the active tracer and the live stream
+    (each a no-op when its half is off)."""
+    rate = n_items / wall_s if wall_s > 0 else None
     tracer = obs.get_tracer()
-    if tracer is None:
-        return
-    tracer.metrics.counter("sweep.items", executor=executor).inc(n_items)
-    tracer.metrics.counter("sweep.chunks", executor=executor).inc()
-    if wall_s > 0:
-        rate = n_items / wall_s
-        tracer.metrics.histogram("sweep.items_per_s",
-                                 executor=executor).observe(rate)
-        tracer.sample("sweep.items_per_s", rate)
+    if tracer is not None:
+        tracer.metrics.counter("sweep.items", executor=executor).inc(n_items)
+        tracer.metrics.counter("sweep.chunks", executor=executor).inc()
+        if rate is not None:
+            tracer.metrics.histogram("sweep.items_per_s",
+                                     executor=executor).observe(rate)
+            tracer.sample("sweep.items_per_s", rate)
+    obs.publish("chunk", executor=executor, items=int(n_items),
+                wall_s=round(float(wall_s), 6),
+                items_per_s=None if rate is None else round(rate, 6))
 
 
 # ===========================================================================

@@ -143,7 +143,7 @@ def test_chrome_trace_golden():
     doc["pid"] = 7  # pin the one environment-dependent field
     assert obs.to_chrome_trace(doc) == {
         "displayTimeUnit": "ms",
-        "otherData": {"obs_schema": 1, "dropped_spans": 0, "counters": {}},
+        "otherData": {"obs_schema": 2, "dropped_spans": 0, "counters": {}},
         "traceEvents": [
             {"ph": "M", "pid": 7, "tid": 0, "name": "process_name",
              "args": {"name": "repro.obs"}},
