@@ -58,6 +58,26 @@ def run(verbose: bool = True):
     finally:
         _obs_trace._TRACER = prev  # restore whatever tracer the caller had
 
+    # --- segmented candidate kernels (sparse placement path) ----------------
+    from repro.core.candidates import impl_table_np, max_impls_of
+    from repro.kernels.qos_matrix.ops import (greedy_argmax,
+                                              qos_candidates_from_instance)
+    table = jnp.asarray(impl_table_np(np.asarray(small.sm_service), small.S))
+    kM = max_impls_of(small)
+    for use_kernel, tag in ((False, "jnp_ref"), (True, "pallas_interp")):
+        f = lambda: qos_candidates_from_instance(sji, table,
+                                                 use_kernel=use_kernel)
+        t = _time(lambda: f()[1])
+        rows.append((f"qos_candidates_{tag}", t,
+                     f"{small.U * kM / t:.0f} pairs/us U={small.U} k={kM}"))
+    E, P = 64, small.P
+    rng_g = np.random.default_rng(1)
+    v = jnp.asarray(rng_g.normal(size=(E, P)), jnp.float32)
+    m = jnp.asarray(rng_g.random((E, P)) < 0.5)
+    for use_kernel, tag in ((False, "jnp_ref"), (True, "pallas_interp")):
+        t = _time(lambda: greedy_argmax(v, m, use_kernel=use_kernel)[1])
+        rows.append((f"greedy_argmax_{tag}", t, f"rows/us {E/t:.2f} E={E}"))
+
     # --- placement algorithms (paper control plane) -------------------------
     from repro.core import egp_np, agp_np, opt_np, qos_matrix_np as qmn
     Q = qmn(inst)

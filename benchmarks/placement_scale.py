@@ -1,0 +1,168 @@
+"""Placement-at-scale benchmark: one EGP control tick at U = 10³ … 10⁶.
+
+Compares the three evaluator generations on the same synthetic instance
+family (§VI-B catalog: 100 services × ~5.5 implementations, one edge per
+~1000 users):
+
+* **dense** — the global-pad batched evaluator (``pad_instances`` +
+  ``evaluate_batch``): materializes the ``[U, P]`` QoS matrix and vmaps
+  the greedy over per-edge ``[E, U, P]`` masked copies. Memory explodes
+  with U, so it only runs up to ``dense_max_u``; beyond that its
+  footprint is reported from the same bytes model sweeps use for chunk
+  sizing (:func:`repro.sweeps.shard.bytes_per_item`).
+* **bucketed** — the same dense evaluator on a mixed-size batch grouped
+  into geometric size classes (:func:`repro.workloads.bucket_instances`)
+  instead of one global envelope; reported as pad-waste and wall-time vs
+  the global pad on a [U, U/2, U/4, U/8] mix.
+* **sparse** — top-k candidate pairs + lock-step sparse EGP
+  (:func:`repro.workloads.evaluate_sparse`), memory O(U·k + E·P). Exact
+  (k = all eligible implementations), validated against the float64 host
+  path at ``HOST_PARITY_ATOL`` on paper-scale instances.
+
+Registered as the ``placement_scale`` row of ``benchmarks/run.py`` (mini
+U=10³ row in the CI ``--compare`` gate; full grid feeds
+``BENCH_trajectory.jsonl``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+
+def _label(U: int) -> str:
+    return f"u{U // 1000}k" if U >= 1000 else f"u{U}"
+
+
+def dense_bytes(U: int, P: int, E: int) -> int:
+    """Peak dense-evaluator working set (the sweeps chunk-sizing model)."""
+    from repro.sweeps.shard import bytes_per_item
+    return bytes_per_item((U, P, E + 1))
+
+
+def sparse_bytes(U: int, P: int, E: int, k: int) -> int:
+    """Peak sparse-evaluator working set: candidate pairs (idx i32 + q f32
+    + gathered attrs) and the [E, P] greedy state (x, v, considered,
+    relevant, scratch)."""
+    return 4 * (U * (3 * k + 8) + 6 * E * P + 8 * (U + P + E))
+
+
+def _tick_sparse(inst, max_iters, k, use_kernel):
+    from repro.workloads import evaluate_sparse
+    vals, _ = evaluate_sparse([inst], k=k, max_iters=max_iters,
+                              use_kernel=use_kernel)
+    return float(vals[0])
+
+
+def _tick_dense(inst, max_iters):
+    from repro.workloads import evaluate_batch, pad_instances
+    vals, _ = evaluate_batch(pad_instances([inst]), max_iters=max_iters)
+    return float(np.asarray(vals)[0])
+
+
+def run(us: Sequence[int] = (1000,), dense_max_u: int = 20_000,
+        host_max_u: int = 2000, bucket_mix: bool = True,
+        k: Optional[int] = None, use_kernel: bool = False, seed: int = 0,
+        verbose: bool = True) -> Dict:
+    """One placement tick per U; returns ``{"per_u": {label: rec}, ...}``.
+
+    Every timed path is run once untimed first (XLA compile / trace), then
+    timed — a tick latency, not a compiler benchmark.
+    """
+    from repro.core.candidates import max_impls_of
+    from repro.core.instance import synthetic_instance
+    from repro.sweeps.shard import HOST_PARITY_ATOL
+    from repro.workloads import evaluate_host
+
+    out: Dict = {"per_u": {}, "host_parity_atol": HOST_PARITY_ATOL}
+    rel_diffs = []
+    for U in us:
+        E = max(10, U // 1000)
+        inst = synthetic_instance(n_users=int(U), n_edges=E, seed=seed)
+        mi = inst.P + 1  # an edge never picks more than P models
+        k_eff = max_impls_of(inst) if k is None else int(k)
+
+        _tick_sparse(inst, mi, k, use_kernel)  # warm
+        t0 = time.perf_counter()
+        v_sparse = _tick_sparse(inst, mi, k, use_kernel)
+        t_sparse = time.perf_counter() - t0
+
+        rec = {
+            "U": int(U), "E": E, "P": inst.P, "k": k_eff,
+            "sparse_ms": t_sparse * 1e3,
+            "sparse_value": v_sparse,
+            "dense_bytes": dense_bytes(U, inst.P, E),
+            "sparse_bytes": sparse_bytes(U, inst.P, E, k_eff),
+        }
+        rec["mem_ratio"] = rec["dense_bytes"] / rec["sparse_bytes"]
+
+        if U <= dense_max_u:
+            _tick_dense(inst, mi)  # warm
+            t0 = time.perf_counter()
+            v_dense = _tick_dense(inst, mi)
+            t_dense = time.perf_counter() - t0
+            rec["dense_ms"] = t_dense * 1e3
+            rec["speedup"] = t_dense / t_sparse
+            rec["dense_sparse_rel_diff"] = (abs(v_dense - v_sparse)
+                                            / max(1.0, abs(v_dense)))
+        if U <= host_max_u:
+            v_host = float(evaluate_host([inst])[0])
+            rel = abs(v_sparse - v_host) / max(1.0, abs(v_host))
+            rec["host_rel_diff"] = rel
+            rel_diffs.append(rel)
+
+        out["per_u"][_label(int(U))] = rec
+        if verbose:
+            d = rec.get("dense_ms")
+            print(f"[placement_scale] U={U:>7d} sparse {rec['sparse_ms']:9.2f} ms"
+                  + (f"  dense {d:9.2f} ms  ({rec['speedup']:.1f}x)"
+                     if d is not None else "  dense (bytes model only)")
+                  + f"  mem x{rec['mem_ratio']:.0f}", flush=True)
+
+    out["rel_diff_paper"] = max(rel_diffs) if rel_diffs else None
+
+    if bucket_mix:
+        from repro.workloads import (bucket_instances, evaluate_batch,
+                                     pad_instances)
+        U0 = int(min(us))
+        mix = [synthetic_instance(n_users=max(8, U0 // (2 ** i)),
+                                  n_edges=max(4, (U0 // (2 ** i)) // 1000),
+                                  seed=seed + i) for i in range(4)]
+        mi = max(i.P for i in mix) + 1
+
+        def tick_global():
+            v, _ = evaluate_batch(pad_instances(mix), max_iters=mi)
+            return np.asarray(v, np.float64)
+
+        def tick_bucketed():
+            v, _ = evaluate_batch(bucket_instances(mix), max_iters=mi)
+            return np.asarray(v, np.float64)
+
+        vg = tick_global()
+        t0 = time.perf_counter()
+        vg = tick_global()
+        t_global = time.perf_counter() - t0
+        vb = tick_bucketed()
+        t0 = time.perf_counter()
+        vb = tick_bucketed()
+        t_bucket = time.perf_counter() - t0
+        bb = bucket_instances(mix)
+        out["bucket_mix"] = {
+            "global_ms": t_global * 1e3,
+            "bucket_ms": t_bucket * 1e3,
+            "pad_waste": bb.pad_waste,
+            "n_buckets": len(bb.buckets),
+            "max_abs_diff": float(np.abs(vg - vb).max()),
+        }
+        if verbose:
+            bm = out["bucket_mix"]
+            print(f"[placement_scale] mixed batch: global "
+                  f"{bm['global_ms']:.2f} ms vs bucketed "
+                  f"{bm['bucket_ms']:.2f} ms, pad_waste={bm['pad_waste']:.2f},"
+                  f" max|Δ|={bm['max_abs_diff']:.1e}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    run(us=(1000, 10_000), verbose=True)

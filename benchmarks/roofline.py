@@ -19,9 +19,10 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-PEAK_FLOPS = 197e12      # bf16 / chip
+PEAK_FLOPS = 197e12      # bf16 / chip (MXU)
 HBM_BW = 819e9           # B/s / chip
 ICI_BW = 50e9            # B/s / link
+VPU_FLOPS = 2.5e12       # f32 elementwise / chip (order-of-magnitude VPU peak)
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
 OUT = Path(__file__).resolve().parent.parent / "experiments"
@@ -94,6 +95,43 @@ def what_would_help(row: dict) -> str:
     return "compute-bound: MXU-align tiles; reduce remat recompute"
 
 
+def placement_rows(us=(100_000, 1_000_000), k: int = 10) -> list:
+    """Analytic roofline for the segmented placement kernels (no dry-run
+    artifact — these are elementwise VPU kernels, so the model is a flat
+    bytes/flops count, not an HLO walk).
+
+    Per tick: ``qos_candidates`` touches every (user, candidate) pair once
+    (4 f32 candidate attrs in, 1 f32 QoS out, ~12 flops of Eq. 1–6
+    arithmetic); ``greedy_argmax`` re-reads the ``[E, P]`` benefit + mask
+    state every pick, for up to ~k picks per edge. Intensity is < 1
+    flop/byte on both — firmly memory-bound, so tick latency at scale is
+    HBM traffic ÷ bandwidth, which is what the U = 10⁵…10⁶ targets in
+    ROADMAP are sized against.
+    """
+    rows = []
+    for U in us:
+        E, P = max(10, U // 1000), 550
+        cand_bytes = 16 * U + (4 * 4 + 4) * U * k
+        cand_flops = 12 * U * k
+        picks = k  # an edge stops after ~k picks (one per local service)
+        greedy_bytes = picks * 8 * E * P
+        greedy_flops = picks * 3 * E * P
+        bytes_total = cand_bytes + greedy_bytes
+        flops_total = cand_flops + greedy_flops
+        mem_s = bytes_total / HBM_BW
+        comp_s = flops_total / VPU_FLOPS
+        rows.append({
+            "arch": "placement_sparse", "shape": f"u{U // 1000}k",
+            "mesh": "vpu-analytic", "kind": "analytic",
+            "bytes": bytes_total, "flops": flops_total,
+            "intensity_flop_per_byte": flops_total / bytes_total,
+            "compute_s": comp_s, "memory_s": mem_s,
+            "dominant": "memory" if mem_s >= comp_s else "compute",
+            "tick_bound_ms": max(mem_s, comp_s) * 1e3,
+        })
+    return rows
+
+
 def build(mesh_filter: str = None, verbose: bool = True):
     rows = []
     for f in sorted(ARTIFACTS.glob("*.json")):
@@ -119,6 +157,18 @@ def build(mesh_filter: str = None, verbose: bool = True):
             f"| {r['collective_s']:.3e} | {r['dominant']} "
             f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
             f"| {r['mem_gib']:.1f} | {'Y' if r['hbm_fit'] else 'N'} |")
+    prows = placement_rows()
+    lines += ["", "### Placement kernels (analytic, VPU)", "",
+              "| arch | shape | intensity F/B | memory s | compute s | "
+              "dominant | tick bound ms |",
+              "|---|---|---|---|---|---|---|"]
+    for r in prows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['intensity_flop_per_byte']:.2f} | {r['memory_s']:.3e} "
+            f"| {r['compute_s']:.3e} | {r['dominant']} "
+            f"| {r['tick_bound_ms']:.3f} |")
+    rows += prows
     md = "\n".join(lines)
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "roofline.json").write_text(json.dumps(rows, indent=1))

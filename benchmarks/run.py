@@ -49,8 +49,8 @@ BENCH_TRAJ_SCHEMA_VERSION = 1
 #: the kernel_* micro rows).
 ROW_GROUPS = ("fig3_validation", "fig4_scale", "fig5_realworld",
               "serving_horizon", "tuning_fit", "fleet_scaling",
-              "scenario_sweep", "kernels", "obs_overhead",
-              "roofline_table")
+              "scenario_sweep", "placement_scale", "kernels",
+              "obs_overhead", "roofline_table")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -238,6 +238,32 @@ def main() -> int:
              f";host_us={sc['host_s'] * 1e6 / sc['n_instances']:.0f}"
              f";hyst_minus_greedy={dyn['hysteresis'] - dyn['greedy']:.1f}")
 
+    if want("placement_scale"):
+        from benchmarks import placement_scale
+        ps_us = (1000, 10_000, 100_000) if args.full else (1000,)
+        t0 = time.perf_counter()
+        ps = placement_scale.run(us=ps_us, verbose=False)
+        dt = (time.perf_counter() - t0) * 1e6 / len(ps_us)
+        parts = []
+        for lbl, rec in ps["per_u"].items():
+            parts.append(f"sparse_{lbl}_ms={rec['sparse_ms']:.2f}")
+            if "dense_ms" in rec:
+                parts.append(f"dense_{lbl}_ms={rec['dense_ms']:.2f}")
+            parts.append(f"mem_ratio_{lbl}={rec['mem_ratio']:.0f}")
+            # speedup is a ratio of two timings — machine-dependent, so it
+            # only goes into --full rows (the trajectory), never the mini
+            # row the CI --compare gate checks as a quality field
+            if args.full and "speedup" in rec:
+                parts.append(f"speedup_{lbl}={rec['speedup']:.1f}")
+        if ps["rel_diff_paper"] is not None:
+            parts.append(f"rel_diff_paper={ps['rel_diff_paper']:.2e}")
+        bm = ps.get("bucket_mix")
+        if bm:
+            parts.append(f"bucketed_mix_ms={bm['bucket_ms']:.2f}"
+                         f";global_pad_ms={bm['global_ms']:.2f}"
+                         f";pad_waste_pct={bm['pad_waste'] * 100:.1f}")
+        emit("placement_scale", dt, ";".join(parts))
+
     if want("kernels"):
         from benchmarks import kernels_micro
         for name, us, derived in kernels_micro.run(verbose=False):
@@ -255,7 +281,10 @@ def main() -> int:
     if want("roofline_table"):
         from benchmarks import roofline
         rows = roofline.build(verbose=False)
-        ok_rows = [r for r in rows if "skip" not in r]
+        # analytic placement rows carry no roofline_fraction — keep them
+        # out of the HLO-derived aggregate
+        ok_rows = [r for r in rows
+                   if "skip" not in r and "roofline_fraction" in r]
         if ok_rows:
             worst = min(ok_rows, key=lambda r: r["roofline_fraction"])
             best = max(ok_rows, key=lambda r: r["roofline_fraction"])

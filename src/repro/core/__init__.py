@@ -32,7 +32,17 @@ from .placement import (
     rnd_np,
     egp_place_jax,
     agp_place_jax,
+    egp_place_sparse_jax,
+    sigma_sparse_jnp,
     place_and_schedule,
+)
+from .candidates import (
+    CandidateSet,
+    impl_table_np,
+    max_impls_of,
+    topk_candidates_np,
+    topk_candidates_jnp,
+    sigma_sparse_np,
 )
 from .opt import opt_np, opt_edge_np, brute_force_np
 
@@ -45,7 +55,10 @@ __all__ = [
     "oms_np", "oms_jnp", "sigma_np", "sigma_jnp", "sigma_user_np",
     "schedule_value_np",
     "egp_np", "agp_np", "agp_literal_np", "sck_np", "rnd_np",
-    "egp_place_jax", "agp_place_jax", "place_and_schedule",
+    "egp_place_jax", "agp_place_jax", "egp_place_sparse_jax",
+    "sigma_sparse_jnp", "place_and_schedule",
+    "CandidateSet", "impl_table_np", "max_impls_of", "topk_candidates_np",
+    "topk_candidates_jnp", "sigma_sparse_np",
     "opt_np", "opt_edge_np", "brute_force_np",
 ]
 from .dynamic import DynamicPlacer, evaluate_horizon  # noqa: E402

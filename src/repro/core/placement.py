@@ -18,6 +18,11 @@ the serving control plane uses):
 
 * :func:`egp_place_jax`, :func:`agp_place_jax` — vmapped-over-edges masked
   ``lax.while_loop`` greedy selection over the QoS matrix.
+* :func:`egp_place_sparse_jax`, :func:`sigma_sparse_jnp` — the same
+  Algorithm 3 decisions driven from a top-k ``(user, candidate)`` pair set
+  (:mod:`repro.core.candidates`), all edges advanced in lock-step by one
+  joint ``lax.while_loop``; state is O(U·k + E·P) instead of the dense
+  path's O(E·U·P), which is what makes 10⁵–10⁶-user ticks feasible.
 """
 from __future__ import annotations
 
@@ -34,6 +39,7 @@ __all__ = [
     "FEASIBILITY_TOL",
     "egp_np", "agp_np", "agp_literal_np", "sck_np", "rnd_np",
     "egp_place_jax", "agp_place_jax", "place_and_schedule",
+    "egp_place_sparse_jax", "sigma_sparse_jnp",
 ]
 
 #: Shared feasibility slack for ``r_sm ≤ R̂`` checks. One constant for the
@@ -359,6 +365,130 @@ def egp_place_jax(Q, elig, u_edge, u_service, sm_service, sm_r, R, n_services,
         return _egp_one_edge(Qm, m, sm_service, sm_r, r, rel, max_iters)
 
     return jax.vmap(run)(umask, R, relevant)
+
+
+def egp_place_sparse_jax(cand_idx, cand_q, u_edge, sm_service, sm_r, R,
+                         *, max_iters: int = 512, use_kernel: bool = False):
+    """Algorithm 3 over a top-k sparse candidate set, all edges in lock-step.
+
+    Takes the ``(cand_idx, cand_q) [U, k]`` pairs from
+    :func:`repro.core.candidates.topk_candidates_jnp` instead of a dense
+    ``[U, P]`` QoS matrix. One joint ``lax.while_loop`` advances every edge
+    by one greedy pick per iteration (edges that finish early are masked by
+    ``done``), so the working set is the O(E·P) greedy state plus O(U·k)
+    candidate pairs — never the dense path's per-edge O(E·U·P) masked QoS
+    copies. With ``k ≥ M`` (every eligible implementation kept) the picks,
+    tie-breaks, and stop conditions are *identical* to
+    :func:`egp_place_jax` / :func:`egp_np`: ineligible users contribute 0
+    to every benefit sum in the dense path, so dropping them changes
+    nothing; with ``k < M`` this is the documented top-k approximation.
+
+    ``use_kernel=True`` routes the per-iteration masked per-edge argmax
+    through the Pallas ``greedy_argmax`` kernel
+    (:mod:`repro.kernels.qos_matrix`); the default uses the identical jnp
+    reduction (interpret-mode Pallas inside a while_loop is slow on CPU).
+
+    Returns ``x [E, P]`` bool.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    U, K = cand_q.shape
+    P = sm_service.shape[0]
+    E = R.shape[0]
+    NEG = jnp.float32(-1e30)
+
+    valid = cand_idx >= 0
+    # Sentinel column P absorbs scatters from padded candidate slots.
+    col = jnp.where(valid, cand_idx, P).astype(jnp.int32)
+    qpair = jnp.where(valid, cand_q, 0.0).astype(jnp.float32)
+    erow = u_edge.astype(jnp.int32)
+    sm_r = sm_r.astype(jnp.float32)
+    p_arange = jnp.arange(P)
+    e_arange = jnp.arange(E)
+
+    def scatter_ep(w):
+        """Σ over (user, candidate) pairs into the [E, P] model grid."""
+        out = jnp.zeros((E, P + 1), jnp.float32)
+        out = out.at[erow[:, None], col].add(w)
+        return out[:, :P]
+
+    relevant = scatter_ep(valid.astype(jnp.float32)) > 0.0  # [E, P]
+    v0 = scatter_ep(qpair)  # lines 3–6: v[(s,m)] = Σ_{u∈U_e} Q(u,s_u,m)
+
+    def masked_argmax(v, cand):
+        if use_kernel:
+            from repro.kernels.qos_matrix.ops import greedy_argmax
+            _, idx = greedy_argmax(v, cand.astype(jnp.float32),
+                                   use_kernel=True)
+            return jnp.clip(idx, 0, None)
+        return jnp.argmax(jnp.where(cand, v, NEG), axis=1)
+
+    def cond(state):
+        done, it = state[-1], state[-2]
+        return (~done.all()) & (it < max_iters)
+
+    def body(state):
+        x, v, considered, satisfied, remaining, it, done = state
+        cand = relevant & ~considered
+        any_cand = cand.any(axis=1)                       # [E]
+        p_star = masked_argmax(v, cand)                   # [E] line 11
+        fits = sm_r[p_star] <= remaining + FEASIBILITY_TOL
+        place = fits & any_cand & ~done                   # lines 12–14
+        x = x.at[e_arange, p_star].set(x[e_arange, p_star] | place)
+        remaining = remaining - jnp.where(place, sm_r[p_star], 0.0)
+
+        pstar_u = p_star[erow]                            # [U] p* of u's edge
+        place_u = place[erow]
+        # Q(u, s_u, m*) per user — 0 unless p* is one of u's candidates.
+        qstar_u = jnp.where(col == pstar_u[:, None], qpair, 0.0).sum(axis=1)
+
+        def rescore(arg):
+            # lines 15–16: v[p] = Σ_unsat (Q[u,p] − Q[u,p*]) for siblings
+            # of s*. O(U·k) pair scatter — only run when something placed.
+            v, satisfied = arg
+            unsat_u = place_u & ~satisfied
+            w = jnp.where(unsat_u[:, None] & valid,
+                          qpair - qstar_u[:, None], 0.0)
+            diff = scatter_ep(w)
+            sib = (sm_service[None, :] == sm_service[p_star][:, None]) \
+                & ~considered & (p_arange[None, :] != p_star[:, None]) \
+                & relevant
+            v = jnp.where(place[:, None] & sib, diff, v)
+            # lines 18–19: users fully satisfied by (s*, m*)
+            satisfied = satisfied | (place_u & (qstar_u >= 1.0 - 1e-6))
+            return v, satisfied
+
+        v, satisfied = jax.lax.cond(place.any(), rescore, lambda a: a,
+                                    (v, satisfied))
+        considered = considered.at[e_arange, p_star].set(
+            considered[e_arange, p_star] | any_cand)      # line 17
+        n_unsat = jnp.zeros(E, jnp.int32).at[erow].add(
+            (~satisfied).astype(jnp.int32))
+        all_sat = n_unsat == 0
+        all_cons = (considered | ~relevant).all(axis=1)
+        # line 20 — same stop conditions (and tolerances) as _egp_one_edge
+        done = done | ~any_cand | (remaining <= 1e-6) | all_sat | all_cons
+        return x, v, considered, satisfied, remaining, it + 1, done
+
+    init = (jnp.zeros((E, P), bool), v0, jnp.zeros((E, P), bool),
+            jnp.zeros(U, bool), R.astype(jnp.float32), jnp.int32(0),
+            jnp.zeros(E, bool))
+    x, *_ = jax.lax.while_loop(cond, body, init)
+    return x
+
+
+def sigma_sparse_jnp(cand_idx, cand_q, u_edge, x):
+    """σ (Eq. 9 with OMS folded in) over candidate pairs: each user gets its
+    best *placed* candidate at its own edge. Exact vs
+    :func:`repro.core.scheduling.sigma_jnp` when the candidate set kept
+    every eligible implementation (``k ≥ M``)."""
+    import jax.numpy as jnp
+
+    valid = cand_idx >= 0
+    safe = jnp.clip(cand_idx, 0, None)
+    placed = x[u_edge[:, None], safe] & valid
+    return jnp.where(placed, cand_q, 0.0).max(axis=1).sum()
 
 
 def place_and_schedule(inst: PIESInstance, algo: str = "egp", seed: int = 0,

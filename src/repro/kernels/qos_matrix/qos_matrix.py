@@ -1,14 +1,25 @@
-"""Pallas TPU kernel for the PIES QoS matrix (Eqs. 1–6).
+"""Pallas TPU kernels for the PIES placement hot path.
 
 At fleet scale the placement controller evaluates ``Q(u, s, m)`` for every
 (request × implementation) pair each control tick — U ~ 10⁶, P ~ 10³ — and
-this elementwise-broadcast evaluation is the control-plane hot spot. The
-kernel tiles (users × service-models) into VMEM blocks: per-user vectors
-arrive as [BU, 1] column tiles, per-model vectors as [1, BP] row tiles, and
-the [BU, BP] output tile is pure VPU work (compare/select/FMA — no MXU).
+this elementwise-broadcast evaluation is the control-plane hot spot. Three
+kernels, all pure VPU work (compare/select/FMA — no MXU):
 
-Tile sizes default to (256, 256): (1 + 1 + out) tiles ≈ 256·256·4 B ≈
-260 KiB ≪ 16 MiB VMEM, and the lane dimension (BP) is a multiple of 128.
+* :func:`qos_matrix_pallas` — the dense ``[U, P]`` QoS matrix (Eqs. 1–6),
+  tiled (users × service-models): per-user vectors arrive as [BU, 1]
+  column tiles, per-model vectors as [1, BP] row tiles.
+* :func:`qos_candidates_pallas` — the *segmented* variant: QoS over
+  pre-gathered ``(user, candidate)`` pairs in ``[BU, BK]`` tiles, where
+  ``K = top-k`` eligible implementations per user (≈ 10) instead of all
+  ``P``. Work and memory scale with ``U·k``, which is what the sparse EGP
+  path at 10⁵–10⁶ users runs on.
+* :func:`greedy_argmax_pallas` — masked per-edge argmax over the greedy
+  benefit map ``v [E, P]`` (the segment-max that picks line 11's ``p*``
+  for every edge at once), with ``jnp.argmax``'s first-maximum tie rule.
+
+Tile sizes default to (256, 256) for the dense kernel: (1 + 1 + out)
+tiles ≈ 256·256·4 B ≈ 260 KiB ≪ 16 MiB VMEM, and the lane dimension is a
+multiple of 128.
 """
 from __future__ import annotations
 
@@ -17,6 +28,32 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+import numpy as np
+
+_I32 = np.iinfo(np.int32)
+
+
+def check_service_ids(*arrays) -> None:
+    """Guard the kernels' int32 id downcast.
+
+    The kernels compare service ids in int32. Concrete integer inputs that
+    do not fit int32 would wrap silently on ``.astype(int32)`` and corrupt
+    the eligibility mask, so reject them loudly. Tracers (inside ``jit``)
+    are skipped — values are unknown there, and every realistic catalog
+    (ids < 2³¹) is unaffected.
+    """
+    for x in arrays:
+        if isinstance(x, jax.core.Tracer):
+            continue
+        arr = np.asarray(x)
+        if np.issubdtype(arr.dtype, np.integer) and arr.size:
+            lo, hi = int(arr.min()), int(arr.max())
+            if hi > _I32.max or lo < _I32.min:
+                raise OverflowError(
+                    f"service ids [{lo}, {hi}] overflow int32; the Pallas "
+                    "QoS kernels compare ids in int32 — re-index the "
+                    "service catalog below 2**31 entries")
 
 
 def _qos_kernel(alpha_ref, delta_ref, sk_ref, sw_ref, us_ref,
@@ -48,7 +85,18 @@ def qos_matrix_pallas(u_alpha, u_delta, u_share_k, u_share_w, u_service,
                       sm_acc, sm_k, sm_w, sm_service, *, delta_max: float,
                       block_u: int = 256, block_p: int = 256,
                       interpret: bool = False):
-    """Q [U, P] float32. Inputs are 1-D per-user / per-model vectors."""
+    """Q [U, P] float32. Inputs are 1-D per-user / per-model vectors.
+
+    Dtype contract: the kernel computes in **float32** — float inputs are
+    downcast with ``.astype(float32)`` (float64 loses precision beyond
+    ~7 decimal digits; parity with the float64 host path
+    :func:`repro.core.qos.qos_matrix_np` holds to ~1e-6 relative, and
+    callers comparing against it must use f32 tolerances, not exact
+    equality). Service ids are compared in **int32**; concrete ids outside
+    int32 range raise :class:`OverflowError` instead of wrapping (see
+    :func:`check_service_ids`).
+    """
+    check_service_ids(u_service, sm_service)
     U, Pn = u_alpha.shape[0], sm_acc.shape[0]
     gu, gp = pl.cdiv(U, block_u), pl.cdiv(Pn, block_p)
     Upad, Ppad = gu * block_u, gp * block_p
@@ -78,3 +126,128 @@ def qos_matrix_pallas(u_alpha, u_delta, u_share_k, u_share_w, u_service,
         interpret=interpret,
     )(*args)
     return out[:U, :Pn]
+
+
+def _qos_cand_kernel(alpha_ref, delta_ref, sk_ref, sw_ref,
+                     acc_ref, k_ref, w_ref, valid_ref, out_ref,
+                     *, delta_max: float):
+    alpha = alpha_ref[...]          # [BU, 1] per-user columns
+    delta = delta_ref[...]
+    share_k = sk_ref[...]
+    share_w = sw_ref[...]
+    acc = acc_ref[...]              # [BU, BK] pre-gathered candidate attrs
+    kcost = k_ref[...]
+    wcost = w_ref[...]
+    valid = valid_ref[...]          # [BU, BK] 1.0 where the slot is real
+
+    adiff = alpha - acc             # Eq. (2)
+    a_hat = jnp.where(adiff <= 0.0, 1.0, jnp.maximum(0.0, 1.0 - adiff))
+    d = kcost * share_k + wcost * share_w     # Eqs. (4)–(6)
+    over = d - delta
+    d_hat = jnp.where(over <= 0.0, 1.0,       # Eq. (3)
+                      jnp.maximum(0.0, 1.0 - over / delta_max))
+    out_ref[...] = 0.5 * (a_hat + d_hat) * valid
+
+
+def qos_candidates_pallas(u_alpha, u_delta, u_share_k, u_share_w,
+                          cand_acc, cand_k, cand_w, cand_valid, *,
+                          delta_max: float, block_u: int = 256,
+                          block_k: int = 128, interpret: bool = False):
+    """Segmented QoS over ``(user, candidate)`` pairs → ``[U, K] float32``.
+
+    Inputs: per-user vectors ``u_* [U]`` plus candidate attribute tables
+    ``cand_* [U, K]`` pre-gathered by :func:`repro.core.candidates
+    .topk_candidates_jnp` (model accuracy / kernel cost / weight cost per
+    candidate slot) and ``cand_valid [U, K]`` float mask (0 for padded
+    slots, whose output is forced to 0 — eligibility is already baked into
+    the candidate gather, so no id compare happens here).
+
+    Same float32 dtype contract as :func:`qos_matrix_pallas`. ``K`` is
+    padded up to a lane multiple (``block_k``); the caller's true K (≈ 10)
+    makes this kernel's footprint ``U·block_k`` — independent of ``P``.
+    """
+    U, K = cand_acc.shape
+    gu, gk = pl.cdiv(U, block_u), pl.cdiv(K, block_k)
+    Upad, Kpad = gu * block_u, gk * block_k
+    f32 = jnp.float32
+
+    def pad2(x):
+        if x.shape == (Upad, Kpad):
+            return x.astype(f32)
+        return jnp.pad(x.astype(f32),
+                       ((0, Upad - U), (0, Kpad - K)))
+
+    def ucol(x):
+        x = x.astype(f32)
+        if U != Upad:
+            x = jnp.pad(x, (0, Upad - U))
+        return x.reshape(Upad, 1)
+
+    args = (ucol(u_alpha), ucol(u_delta), ucol(u_share_k), ucol(u_share_w),
+            pad2(cand_acc), pad2(cand_k), pad2(cand_w), pad2(cand_valid))
+    uspec = pl.BlockSpec((block_u, 1), lambda i, j: (i, 0))
+    kspec = pl.BlockSpec((block_u, block_k), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        functools.partial(_qos_cand_kernel, delta_max=float(delta_max)),
+        grid=(gu, gk),
+        in_specs=[uspec] * 4 + [kspec] * 4,
+        out_specs=pl.BlockSpec((block_u, block_k), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Upad, Kpad), f32),
+        interpret=interpret,
+    )(*args)
+    return out[:U, :K]
+
+
+def _greedy_argmax_kernel(v_ref, mask_ref, best_ref, idx_ref):
+    v = v_ref[...]                  # [BE, Kp] benefit rows (full width)
+    m = mask_ref[...]               # [BE, Kp] 1.0 on candidate slots
+    Kp = v.shape[1]
+    NEG = jnp.float32(-1e30)
+    masked = jnp.where(m > 0.0, v, NEG)
+    best = jnp.max(masked, axis=1, keepdims=True)          # [BE, 1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, masked.shape, 1)
+    # first-maximum tie rule, same as jnp.argmax
+    idx = jnp.min(jnp.where(masked == best, cols, Kp), axis=1,
+                  keepdims=True)
+    has = jnp.max(m, axis=1, keepdims=True) > 0.0
+    best_ref[...] = jnp.where(has, best, NEG)
+    idx_ref[...] = jnp.where(has, idx, -1)
+
+
+def greedy_argmax_pallas(v, mask, *, block_e: int = 8,
+                         interpret: bool = False):
+    """Masked row argmax for the per-edge greedy pick (Alg. 3 line 11).
+
+    ``v [E, P] float32`` is the benefit map, ``mask [E, P]`` float (1.0 on
+    unconsidered relevant candidates — the segment of each edge's benefit
+    row still in play). Returns ``(best [E] float32, idx [E] int32)`` with
+    ``idx = -1`` (and ``best = -1e30``) for rows with an empty mask.
+    Tie-break matches ``jnp.argmax`` (first maximum). Benefit values may
+    be negative — masking uses a −1e30 sentinel, not 0.
+
+    Each grid step loads ``block_e`` full benefit rows (P padded to a lane
+    multiple of 128): at P ~ 10³ a [8, 1024] tile is 32 KiB — the argmax
+    is row-local so no cross-tile reduction is needed.
+    """
+    E, P = v.shape
+    ge = pl.cdiv(E, block_e)
+    Epad = ge * block_e
+    Ppad = pl.cdiv(P, 128) * 128
+    f32 = jnp.float32
+
+    def pad2(x):
+        if x.shape == (Epad, Ppad):
+            return x.astype(f32)
+        return jnp.pad(x.astype(f32), ((0, Epad - E), (0, Ppad - P)))
+
+    rspec = pl.BlockSpec((block_e, Ppad), lambda i: (i, 0))
+    best, idx = pl.pallas_call(
+        _greedy_argmax_kernel,
+        grid=(ge,),
+        in_specs=[rspec, rspec],
+        out_specs=[pl.BlockSpec((block_e, 1), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((Epad, 1), f32),
+                   jax.ShapeDtypeStruct((Epad, 1), jnp.int32)],
+        interpret=interpret,
+    )(pad2(v), pad2(mask))
+    return best[:E, 0], idx[:E, 0]

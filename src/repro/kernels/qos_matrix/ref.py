@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the QoS matrix kernel."""
+"""Pure-jnp oracles for the QoS-matrix / segmented-placement kernels."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -16,3 +16,29 @@ def qos_matrix_ref(u_alpha, u_delta, u_share_k, u_share_w, u_service,
                       jnp.maximum(0.0, 1.0 - over / delta_max))
     elig = (u_service[:, None] == sm_service[None, :]).astype(f32)
     return 0.5 * (a_hat + d_hat) * elig
+
+
+def qos_candidates_ref(u_alpha, u_delta, u_share_k, u_share_w,
+                       cand_acc, cand_k, cand_w, cand_valid, *,
+                       delta_max: float):
+    """Segmented QoS over pre-gathered ``(user, candidate)`` pairs [U, K]."""
+    f32 = jnp.float32
+    adiff = u_alpha.astype(f32)[:, None] - cand_acc.astype(f32)
+    a_hat = jnp.where(adiff <= 0.0, 1.0, jnp.maximum(0.0, 1.0 - adiff))
+    d = (cand_k.astype(f32) * u_share_k.astype(f32)[:, None]
+         + cand_w.astype(f32) * u_share_w.astype(f32)[:, None])
+    over = d - u_delta.astype(f32)[:, None]
+    d_hat = jnp.where(over <= 0.0, 1.0,
+                      jnp.maximum(0.0, 1.0 - over / delta_max))
+    return 0.5 * (a_hat + d_hat) * cand_valid.astype(f32)
+
+
+def greedy_argmax_ref(v, mask):
+    """Masked row argmax: ``(best [E] f32, idx [E] i32)``, −1 on empty rows."""
+    f32 = jnp.float32
+    NEG = f32(-1e30)
+    masked = jnp.where(mask.astype(f32) > 0.0, v.astype(f32), NEG)
+    best = jnp.max(masked, axis=1)
+    idx = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    has = (mask.astype(f32) > 0.0).any(axis=1)
+    return jnp.where(has, best, NEG), jnp.where(has, idx, -1)

@@ -115,6 +115,13 @@ DEFAULT_SLOS = (
     SLO("queue-depth", "tick.queue_depth", max_value=4096, agg="max"),
     SLO("p99-latency", "hist.serving.latency_s.p99", max_value=30.0),
     SLO("obs-overhead", "bench.obs_overhead.disabled_pct", max_value=3.0),
+    # Sparse-placement guarantees: the top-k candidate path must match the
+    # float64 host evaluator on paper-scale instances, and the candidate
+    # representation must actually buy its claimed memory headroom.
+    SLO("placement-parity", "bench.placement_scale.rel_diff_paper",
+        max_value=1e-4),
+    SLO("placement-mem-ratio", "bench.placement_scale.mem_ratio_u1k",
+        min_value=10.0),
 )
 
 

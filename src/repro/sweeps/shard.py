@@ -133,8 +133,19 @@ def _sharded_evaluator(mesh, algo: str, n_services: int, max_iters: int):
 
 def _eval_accel_chunk(instances: List, algo: str,
                       envelope: Tuple[int, int, int], mesh,
-                      max_iters: int) -> Tuple[np.ndarray, str, float]:
+                      max_iters: int, bucketed: bool = True
+                      ) -> Tuple[np.ndarray, str, float]:
     """Evaluate one chunk; returns (values [B], path, exec_seconds).
+
+    With ``bucketed=True`` (the default) the chunk's instances are grouped
+    into geometric size classes (:func:`repro.workloads.batched
+    .bucket_envelope`, capped by the group's static ``envelope``) and each
+    bucket is padded and evaluated at its own envelope — one outlier no
+    longer inflates every instance's pad. Because the bucket envelope is a
+    pure function of each instance's own dims, per-item results are
+    independent of chunk composition, exactly as on the global-pad path —
+    resume, re-chunk, and fleet-merge byte-identity are preserved.
+    ``bucketed=False`` keeps the legacy single-envelope pad.
 
     ``exec_seconds`` is the steady-state execution wall time: the first
     call per (path, shape) triggers the XLA compile, so that chunk is
@@ -143,39 +154,49 @@ def _eval_accel_chunk(instances: List, algo: str,
     compiler, not evaluator (input donation means the first batch may be
     consumed, hence the re-pad rather than a re-call).
     """
-    from repro.workloads.batched import evaluate_batch, pad_instances
+    from repro.workloads.batched import (bucket_indices, evaluate_batch,
+                                         pad_instances)
 
     B = len(instances)
     n_dev = 1 if mesh is None else _mesh_n_devices(mesh)
-    if n_dev > 1:
-        pad = (-B) % n_dev
-        instances = list(instances) + [instances[0]] * pad
-    U, P, E = envelope
+    if bucketed:
+        groups = bucket_indices(instances, cap=envelope)
+    else:
+        groups = [(tuple(envelope), list(range(B)))]
+    path = "vmap" if n_dev <= 1 else "shard_map"
 
     def call():
-        batch = pad_instances(instances, u_pad=U, p_pad=P, e_pad=E)
-        if n_dev <= 1:
-            values, _ = evaluate_batch(batch, algo=algo,
-                                       max_iters=max_iters)
-            return np.asarray(values, np.float64), "vmap"
-        fn = _sharded_evaluator(mesh, algo, batch.n_services, max_iters)
-        values, _ = fn(batch.jax_instance)
-        return np.asarray(values, np.float64), "shard_map"
+        out = np.empty(B, dtype=np.float64)
+        for benv, idx in groups:
+            members = [instances[i] for i in idx]
+            if n_dev > 1:
+                members = members + [members[0]] * ((-len(idx)) % n_dev)
+            batch = pad_instances(members, *benv)
+            if n_dev <= 1:
+                values, _ = evaluate_batch(batch, algo=algo,
+                                           max_iters=max_iters)
+            else:
+                fn = _sharded_evaluator(mesh, algo, batch.n_services,
+                                        max_iters)
+                values, _ = fn(batch.jax_instance)
+            out[idx] = np.asarray(values, np.float64)[:len(idx)]
+        return out
 
     t0 = time.perf_counter()
-    values, path = call()
+    values = call()
     exec_s = time.perf_counter() - t0
     # Benchmark-scale chunks get compile-free timings via one re-run; for
     # production-scale chunks (> _RETIME_MAX_B items) the 2x compute to
     # refine a timing nobody is bottlenecked on is not worth it — their
     # wall clock amortizes the one-off compile anyway.
-    warm_key = (path, algo, envelope, len(instances), n_dev, max_iters)
+    warm_key = (path, algo, tuple((benv, len(idx)) for benv, idx in groups),
+                n_dev, max_iters)
     if B <= _RETIME_MAX_B and warm_key not in _WARMED:
         _WARMED.add(warm_key)
         t0 = time.perf_counter()
-        values, path = call()
+        values = call()
         exec_s = time.perf_counter() - t0
-    return values[:B], path, exec_s
+    return values, path, exec_s
 
 
 # ===========================================================================
@@ -319,6 +340,7 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
               memory_budget_mb: float = DEFAULT_MEMORY_BUDGET_MB,
               mesh=None,
               max_chunks: Optional[int] = None,
+              bucketed: bool = True,
               verbose: bool = False) -> SweepResult:
     """Run (or resume) a sweep; returns the collected :class:`SweepResult`.
 
@@ -326,7 +348,10 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
     completed items are skipped and newly computed chunks are persisted as
     soon as they finish. ``max_chunks`` stops after that many computed
     chunks (testing / incremental smoke runs) — the result is then partial
-    (NaN cells) but everything computed is durable.
+    (NaN cells) but everything computed is durable. ``bucketed`` pads each
+    accelerator chunk per geometric size class instead of one global
+    envelope (item keys, store bytes, and resume semantics are identical
+    either way — see :func:`_eval_accel_chunk`).
     """
     store = SweepStore(store_dir) if store_dir is not None else None
     if store is not None:
@@ -441,7 +466,8 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
                           scenario=scenario, algo=algo, items=len(chunk)):
                 if executor == "accel":
                     vals, path, exec_s = _eval_accel_chunk(
-                        insts, algo, envelope, mesh, spec.max_iters)
+                        insts, algo, envelope, mesh, spec.max_iters,
+                        bucketed=bucketed)
                     wall = time.perf_counter() - t0
                     # per-item time is steady-state execution, not compile
                     times = np.full(len(chunk), exec_s / len(chunk))
@@ -457,6 +483,7 @@ def run_sweep(spec: SweepSpec, store_dir=None, *,
             meta = {"scenario": scenario, "overrides": dict(overrides),
                     "algo": algo, "executor": executor, "path": path,
                     "envelope": list(envelope), "n_devices": group_dev,
+                    "bucketed": bool(bucketed and executor == "accel"),
                     "wall_s": round(wall, 6), "B": len(chunk)}
             if store is not None:
                 store.add_chunk(chunk_keys, vals, times, meta)

@@ -31,8 +31,12 @@ from .scenarios import (
 )
 from .batched import (
     PaddedBatch,
+    BucketedBatch,
     pad_instances,
+    bucket_envelope,
+    bucket_instances,
     evaluate_batch,
+    evaluate_sparse,
     evaluate_host,
     sweep,
 )
@@ -43,6 +47,7 @@ __all__ = [
     "hash_uniform", "ZipfPopularity", "ChurnModel", "MarkovMobility",
     "Scenario", "register_scenario", "get_scenario", "list_scenarios",
     "horizon",
-    "PaddedBatch", "pad_instances", "evaluate_batch", "evaluate_host",
+    "PaddedBatch", "BucketedBatch", "pad_instances", "bucket_envelope",
+    "bucket_instances", "evaluate_batch", "evaluate_sparse", "evaluate_host",
     "sweep",
 ]

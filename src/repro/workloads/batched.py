@@ -25,6 +25,24 @@ Padding conventions (chosen so padded rows are provably inert):
 ``evaluate_host`` is the NumPy reference path (per-instance
 ``egp_np``/``agp_np`` + ``sigma_np``) the batched results are validated
 against — see ``tests/test_workloads.py`` and ``benchmarks/scenarios.py``.
+
+Two scale paths sit on top of the global-pad evaluator:
+
+* **Bucketed batching** (:func:`bucket_instances` / :class:`BucketedBatch`)
+  — instances are grouped into geometric (power-of-two) ``(U, P, E)`` size
+  classes and each bucket is padded to its *own* envelope, so one outlier
+  no longer inflates every instance's pad. The bucket envelope is a pure
+  function of each instance's own dims (never of its batch neighbours),
+  which keeps per-item results independent of batch composition — the
+  property sweep resume/fleet-merge byte-identity rests on.
+  :func:`evaluate_batch` accepts either batch type; bucket pad waste is
+  reported on the ``placement.bucket_pad_waste`` obs gauge.
+* **Sparse top-k candidates** (:func:`evaluate_sparse`) — skips the dense
+  ``[U, P]`` QoS matrix entirely: per-user top-k candidate pairs
+  (:mod:`repro.core.candidates`) feed
+  :func:`repro.core.placement.egp_place_sparse_jax`, with memory O(U·k)
+  instead of O(U·P·E). Exact vs the host path when ``k`` keeps every
+  eligible implementation (the default).
 """
 from __future__ import annotations
 
@@ -41,9 +59,14 @@ from repro.core.scheduling import sigma_np
 
 __all__ = [
     "PaddedBatch",
+    "BucketedBatch",
     "pad_instances",
+    "bucket_envelope",
+    "bucket_indices",
+    "bucket_instances",
     "single_evaluator",
     "evaluate_batch",
+    "evaluate_sparse",
     "evaluate_host",
     "sweep",
 ]
@@ -63,6 +86,86 @@ class PaddedBatch:
     @property
     def B(self) -> int:
         return len(self.dims)
+
+
+@dataclasses.dataclass
+class BucketedBatch:
+    """Instances grouped into per-size-class :class:`PaddedBatch`\\ es.
+
+    ``index[b]`` maps bucket ``b``'s rows back to positions in the original
+    instance sequence; ``envelopes[b]`` is the bucket's ``(U_pad, P_pad,
+    E_pad)``. Buckets are ordered by envelope (deterministic regardless of
+    input order).
+    """
+
+    buckets: List[PaddedBatch]
+    index: List[np.ndarray]
+    envelopes: List[Tuple[int, int, int]]
+    dims: List[Tuple[int, int, int]]   # true (U, P, E) in original order
+
+    @property
+    def B(self) -> int:
+        return len(self.dims)
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of evaluated (U·P·E) cells that are padding, in [0, 1).
+
+        The quantity the bucketing exists to shrink: under a single global
+        envelope every instance pays the max instance's cell count."""
+        true = sum(u * p * (e + 1) for u, p, e in self.dims)
+        padded = sum(len(idx) * up * pp * ep
+                     for idx, (up, pp, ep) in zip(self.index, self.envelopes))
+        return 1.0 - true / padded if padded else 0.0
+
+
+def _pow2_ceil(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def bucket_envelope(U: int, P: int, E: int,
+                    cap: Optional[Tuple[int, int, int]] = None
+                    ) -> Tuple[int, int, int]:
+    """Geometric (power-of-two) size class of one instance's dims.
+
+    Pure function of ``(U, P, E)`` (and the static ``cap``, e.g. a sweep
+    group's :func:`repro.sweeps.spec.envelope_for` envelope) — deliberately
+    *not* of any batch neighbour, so an item's evaluated envelope is
+    identical however the sweep is chunked, resumed, or fleet-split. The
+    edge axis buckets ``E + 1`` (a padded host edge always exists).
+    """
+    env = (_pow2_ceil(U), _pow2_ceil(P), _pow2_ceil(E + 1))
+    if cap is not None:
+        env = tuple(min(a, int(c)) for a, c in zip(env, cap))
+    assert env[0] >= U and env[1] >= P and env[2] > E, \
+        f"cap {cap} below instance dims ({U},{P},{E})"
+    return env
+
+
+def bucket_indices(instances: Sequence[PIESInstance],
+                   cap: Optional[Tuple[int, int, int]] = None
+                   ) -> List[Tuple[Tuple[int, int, int], List[int]]]:
+    """Group instance positions by :func:`bucket_envelope`, sorted by
+    envelope; within a bucket, original order is preserved."""
+    groups: Dict[Tuple[int, int, int], List[int]] = {}
+    for i, inst in enumerate(instances):
+        groups.setdefault(bucket_envelope(inst.U, inst.P, inst.E, cap),
+                          []).append(i)
+    return sorted(groups.items())
+
+
+def bucket_instances(instances: Sequence[PIESInstance],
+                     cap: Optional[Tuple[int, int, int]] = None
+                     ) -> BucketedBatch:
+    """Stack ``instances`` into one :class:`PaddedBatch` per size bucket."""
+    assert instances, "cannot bucket an empty batch"
+    buckets, index, envelopes = [], [], []
+    for env, idx in bucket_indices(instances, cap):
+        buckets.append(pad_instances([instances[i] for i in idx], *env))
+        index.append(np.asarray(idx))
+        envelopes.append(env)
+    return BucketedBatch(buckets=buckets, index=index, envelopes=envelopes,
+                         dims=[(i.U, i.P, i.E) for i in instances])
 
 
 def _share_factors(inst: PIESInstance) -> Tuple[np.ndarray, np.ndarray]:
@@ -170,17 +273,94 @@ def _cached_evaluator(algo: str, n_services: int, max_iters: int):
     return _build_evaluator(algo, n_services, max_iters)
 
 
-def evaluate_batch(batch: PaddedBatch, algo: str = "egp",
-                   max_iters: int = 512):
-    """One jitted accelerator call: ``(values [B], x [B, E_pad, P_pad])``.
+def evaluate_batch(batch, algo: str = "egp", max_iters: int = 512):
+    """Batched placement evaluation: ``(values [B], x)``.
+
+    For a :class:`PaddedBatch` this is one jitted accelerator call and
+    ``x`` is ``[B, E_pad, P_pad]``. For a :class:`BucketedBatch` each
+    bucket runs through the same jitted evaluator at its own envelope
+    (one call per size class) and results are re-assembled in original
+    instance order — ``values`` is a float64 NumPy array and ``x`` a list
+    of per-instance ``[E_pad_b, P_pad_b]`` placements (envelopes differ
+    across buckets). Pad waste is published on the
+    ``placement.bucket_pad_waste`` gauge.
 
     ``values[b]`` is σ(EGP/AGP placement) of instance ``b``; padding
     contributes exactly zero (see module docstring), so values match the
     per-instance host path up to float32 accumulation.
     """
+    if isinstance(batch, BucketedBatch):
+        from repro import obs
+
+        values = np.empty(batch.B, dtype=np.float64)
+        xs: List = [None] * batch.B
+        for pb, idx in zip(batch.buckets, batch.index):
+            v, x = evaluate_batch(pb, algo=algo, max_iters=max_iters)
+            values[idx] = np.asarray(v, np.float64)
+            for j, i in enumerate(idx):
+                xs[int(i)] = x[j]
+        tracer = obs.get_tracer()
+        if tracer is not None:
+            tracer.metrics.gauge("placement.bucket_pad_waste").set(
+                batch.pad_waste)
+        return values, xs
     fn = _cached_evaluator(algo, batch.n_services, max_iters)
     values, x = fn(batch.jax_instance)
     return values, x
+
+
+@functools.lru_cache(maxsize=16)
+def _sparse_evaluator(max_iters: int, use_kernel: bool):
+    import jax
+
+    from repro.core.placement import egp_place_sparse_jax, sigma_sparse_jnp
+
+    def run(cand_idx, cand_q, u_edge, sm_service, sm_r, R):
+        x = egp_place_sparse_jax(cand_idx, cand_q, u_edge, sm_service,
+                                 sm_r, R, max_iters=max_iters,
+                                 use_kernel=use_kernel)
+        return sigma_sparse_jnp(cand_idx, cand_q, u_edge, x), x
+
+    return jax.jit(run)
+
+
+def evaluate_sparse(instances: Sequence[PIESInstance], algo: str = "egp",
+                    k: Optional[int] = None, max_iters: Optional[int] = None,
+                    use_kernel: bool = False):
+    """Top-k sparse placement per instance: ``(values [B], x list)``.
+
+    The scale path: no ``[U, P]`` QoS matrix — per-user candidate pairs
+    (``k`` defaults to *all* eligible implementations, making the result
+    exact vs :func:`evaluate_host`; smaller ``k`` is the documented
+    approximation) drive the lock-step sparse EGP loop.
+    ``max_iters=None`` uses ``P + 1`` (an edge never picks more than P
+    models, so the greedy runs to its natural stop). ``use_kernel`` routes
+    segmented QoS and the per-edge argmax through the Pallas kernels.
+    The effective ``k`` is published on the ``placement.candidate_k``
+    gauge.
+    """
+    if algo != "egp":
+        raise ValueError(f"sparse path implements 'egp' only, got {algo!r}")
+    from repro import obs
+    from repro.core.candidates import impl_table_np
+    from repro.kernels.qos_matrix.ops import qos_candidates_from_instance
+
+    values, xs = [], []
+    tracer = obs.get_tracer()
+    for inst in instances:
+        ji = inst.as_jax()
+        table = impl_table_np(inst.sm_service, inst.S)
+        cand_idx, cand_q = qos_candidates_from_instance(
+            ji, table, k, use_kernel=use_kernel)
+        if tracer is not None:
+            tracer.metrics.gauge("placement.candidate_k").set(
+                int(cand_idx.shape[1]))
+        mi = int(max_iters) if max_iters is not None else inst.P + 1
+        v, x = _sparse_evaluator(mi, use_kernel)(
+            cand_idx, cand_q, ji.u_edge, ji.sm_service, ji.sm_r, ji.R)
+        values.append(float(v))
+        xs.append(x)
+    return np.asarray(values, np.float64), xs
 
 
 def evaluate_host(instances: Sequence[PIESInstance],
@@ -217,7 +397,7 @@ def sweep(scenario_names: Sequence[str], seeds: Sequence[int],
                 instances.append(inst)
                 labels.append((name, int(seed), tick))
 
-    batch = pad_instances(instances)
+    batch = bucket_instances(instances)
     values, _ = evaluate_batch(batch, algo=algo)
     values = np.asarray(values, np.float64)
 

@@ -7,8 +7,12 @@ import pytest
 
 from hypothesis_compat import given, settings, st
 
-from repro.kernels.qos_matrix.qos_matrix import qos_matrix_pallas
-from repro.kernels.qos_matrix.ref import qos_matrix_ref
+from repro.kernels.qos_matrix.qos_matrix import (check_service_ids,
+                                                 greedy_argmax_pallas,
+                                                 qos_candidates_pallas,
+                                                 qos_matrix_pallas)
+from repro.kernels.qos_matrix.ref import (greedy_argmax_ref,
+                                          qos_candidates_ref, qos_matrix_ref)
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gqa_decode.gqa_decode import gqa_decode
@@ -56,6 +60,124 @@ def test_qos_matrix_kernel_matches_core_model():
     Q = np.asarray(qos_matrix_from_instance(inst.as_jax()))
     np.testing.assert_allclose(Q, qos_matrix_np(inst).astype(np.float32),
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_qos_matrix_kernel_f32_parity_vs_float64_host(seed):
+    """The kernel computes in float32 by contract (the f64 host matrix is
+    downcast at the boundary, never silently inside): parity vs the
+    float64 ``qos_matrix_np`` holds at f32 tolerances, not f64 ones."""
+    from repro.core import synthetic_instance, qos_matrix_np
+    from repro.kernels.qos_matrix.ops import qos_matrix_from_instance
+    inst = synthetic_instance(500, seed=seed)
+    Q = np.asarray(qos_matrix_from_instance(inst.as_jax()))
+    assert Q.dtype == np.float32
+    np.testing.assert_allclose(Q, qos_matrix_np(inst),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_service_id_overflow_guard():
+    """int64 service ids beyond int32 range must raise, not wrap silently
+    when the kernel casts to int32."""
+    ok = np.array([0, 5, 2**31 - 1], dtype=np.int64)
+    check_service_ids(ok)  # in-range ids pass through
+    bad = np.array([0, 2**31], dtype=np.int64)
+    with pytest.raises(OverflowError):
+        check_service_ids(bad)
+    with pytest.raises(OverflowError):
+        check_service_ids(ok, np.array([-2**31 - 1], dtype=np.int64))
+
+
+# ===========================================================================
+# qos_candidates (segmented QoS over [U, K] candidate pairs)
+# ===========================================================================
+
+def _cand_args(U, K, seed, frac_valid=0.8):
+    rng = np.random.default_rng(seed)
+    j = jnp.asarray
+    return dict(
+        u_alpha=j(rng.uniform(0, 1, U), jnp.float32),
+        u_delta=j(rng.uniform(0, 10, U), jnp.float32),
+        u_share_k=j(rng.uniform(0.01, 1, U), jnp.float32),
+        u_share_w=j(rng.uniform(0.01, 1, U), jnp.float32),
+        cand_acc=j(rng.uniform(0, 1, (U, K)), jnp.float32),
+        cand_k=j(rng.uniform(1, 30, (U, K)), jnp.float32),
+        cand_w=j(rng.uniform(1, 30, (U, K)), jnp.float32),
+        cand_valid=j(rng.random((U, K)) < frac_valid, jnp.float32),
+    )
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.integers(1, 600), st.integers(1, 20), st.integers(0, 99))
+def test_qos_candidates_kernel_shape_sweep(U, K, seed):
+    args = _cand_args(U, K, seed)
+    out = qos_candidates_pallas(*args.values(), delta_max=10.0,
+                                block_u=128, block_k=128, interpret=True)
+    ref = qos_candidates_ref(*args.values(), delta_max=10.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
+    assert out.shape == (U, K)
+    # invalid pairs are exactly zero, not garbage from the padded lanes
+    assert not np.any(np.asarray(out)[np.asarray(args["cand_valid"]) == 0])
+
+
+def test_qos_candidates_matches_gathered_dense_matrix():
+    """Segmented QoS over gathered pairs == gathering from the full [U, P]
+    kernel output (the sparse path never materializes the latter)."""
+    from repro.core import synthetic_instance
+    from repro.core.candidates import impl_table_np, topk_candidates_jnp
+    from repro.kernels.qos_matrix.ops import qos_matrix_from_instance
+    inst = synthetic_instance(300, seed=6)
+    ji = inst.as_jax()
+    table = impl_table_np(inst.sm_service, inst.S)
+    for use_kernel in (False, True):
+        idx, q = topk_candidates_jnp(ji, np.asarray(table),
+                                     use_kernel=use_kernel)
+        idx, q = np.asarray(idx), np.asarray(q)
+        Q = np.asarray(qos_matrix_from_instance(ji))
+        valid = idx >= 0
+        gathered = Q[np.arange(inst.U)[:, None], np.clip(idx, 0, None)]
+        np.testing.assert_allclose(q[valid], gathered[valid],
+                                   atol=1e-6, rtol=1e-6)
+        assert not q[~valid].any()
+
+
+# ===========================================================================
+# greedy_argmax (masked per-edge argmax, Alg. 3 line 11)
+# ===========================================================================
+
+@settings(deadline=None, max_examples=12)
+@given(st.integers(1, 40), st.integers(1, 400), st.integers(0, 99))
+def test_greedy_argmax_kernel_shape_sweep(E, P, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=(E, P)), jnp.float32)  # negatives too
+    m = jnp.asarray(rng.random((E, P)) < 0.5)
+    best_k, idx_k = greedy_argmax_pallas(v, m, block_e=4, interpret=True)
+    best_r, idx_r = greedy_argmax_ref(v, m)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+    has = np.asarray(m).any(axis=1)
+    np.testing.assert_allclose(np.asarray(best_k)[has],
+                               np.asarray(best_r)[has], rtol=1e-6)
+    # rows with an empty mask report idx −1 (the caller's "no candidate")
+    assert np.all(np.asarray(idx_k)[~has] == -1)
+
+
+def test_greedy_argmax_ties_and_empty_rows():
+    v = jnp.asarray([[1.0, 3.0, 3.0, -2.0],    # tie → first occurrence
+                     [-5.0, -1.0, -9.0, -1.0],  # all-negative tie
+                     [7.0, 8.0, 9.0, 10.0],     # mask empty → −1
+                     [0.0, 0.0, 0.0, 0.0]],     # uniform zeros
+                    jnp.float32)
+    m = jnp.asarray([[1, 1, 1, 1],
+                     [1, 1, 1, 1],
+                     [0, 0, 0, 0],
+                     [0, 1, 0, 1]], bool)
+    for fn in (lambda: greedy_argmax_pallas(v, m, block_e=2, interpret=True),
+               lambda: greedy_argmax_ref(v, m)):
+        best, idx = fn()
+        assert np.asarray(idx).tolist() == [1, 1, -1, 1]
+        assert float(best[0]) == 3.0 and float(best[1]) == -1.0
+        assert float(best[3]) == 0.0
 
 
 # ===========================================================================

@@ -296,6 +296,37 @@ def test_kill_and_resume_skips_completed_chunks(tmp_path):
                                   fresh.values[("steady", "egp")])
 
 
+def test_kill_and_resume_is_byte_identical_under_bucketing(tmp_path):
+    """Bucketed chunk evaluation must not leak batch composition into item
+    values: a killed+resumed bucketed sweep, a fresh bucketed sweep, and a
+    global-envelope (bucketed=False) sweep all agree bitwise, and the
+    resumed store's values reload bitwise."""
+    spec = SweepSpec(scenarios=("steady", "flash_crowd"), seeds=(0, 1),
+                     n_ticks=3,
+                     override_grid=({}, {"n_user_slots": 48}))
+    d = tmp_path / "store"
+    partial = run_sweep(spec, store_dir=d, chunk_size=4, max_chunks=2,
+                        bucketed=True)
+    assert not partial.complete
+    done = run_sweep(spec, store_dir=d, chunk_size=3, bucketed=True)
+    assert done.complete and done.execution["items_skipped"] == 6
+    # chunk meta records the bucketed pad mode on every accel chunk
+    metas = [json.loads(line).get("meta", {})
+             for line in (d / "manifest.jsonl").read_text().splitlines()]
+    assert all(m.get("bucketed") for m in metas if m.get("executor") == "accel")
+
+    fresh = run_sweep(spec, bucketed=True)
+    flat = run_sweep(spec, bucketed=False)
+    for key in done.values:
+        np.testing.assert_array_equal(done.values[key], fresh.values[key])
+        np.testing.assert_array_equal(done.values[key], flat.values[key])
+    # and a pure reload of the store (no compute) is also bitwise equal
+    reload_ = run_sweep(spec, store_dir=d, bucketed=True)
+    assert reload_.execution["chunks_computed"] == 0
+    for key in done.values:
+        np.testing.assert_array_equal(done.values[key], reload_.values[key])
+
+
 def test_host_executor_and_auto_ratio_reference():
     spec = SweepSpec(scenarios=("synthetic",), seeds=(7, 8), n_ticks=1,
                      algos=("egp", "opt", "sck"),

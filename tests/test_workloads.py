@@ -1,11 +1,14 @@
 """repro.workloads — determinism, conservation, batched-vs-host equality,
-and the dynamic-policy payoff on bursty traffic."""
+bucketed batching, and the dynamic-policy payoff on bursty traffic."""
 import numpy as np
 import pytest
 
-from repro.core import qos_matrix_np, sigma_np, egp_np
+from hypothesis_compat import given, settings, st
+
+from repro.core import qos_matrix_np, sigma_np, egp_np, synthetic_instance
 from repro.core.dynamic import evaluate_horizon
 from repro.workloads import (
+    BucketedBatch,
     ChurnModel,
     DiurnalArrivals,
     MarkovMobility,
@@ -13,6 +16,8 @@ from repro.workloads import (
     PoissonArrivals,
     TraceArrivals,
     ZipfPopularity,
+    bucket_envelope,
+    bucket_instances,
     evaluate_batch,
     evaluate_host,
     get_scenario,
@@ -270,6 +275,76 @@ def test_sweep_runs_all_scenarios_in_one_call():
         assert res["values"][name].shape == (1, 2)
         assert np.all(res["values"][name] > 0)
     assert len(res["labels"]) == len(res["instances"]) == 2 * len(ALL_SCENARIOS)
+
+
+# ===========================================================================
+# Bucketed batching == global pad == host
+# ===========================================================================
+
+def _mixed_instances(sizes_seeds):
+    return [synthetic_instance(n_users=u, n_edges=max(2, u // 40), seed=s)
+            for u, s in sizes_seeds]
+
+
+def _check_bucketed_matches_global_and_host(instances, algo="egp"):
+    bb = bucket_instances(instances)
+    v_b, x_b = evaluate_batch(bb, algo=algo)
+    v_g, _ = evaluate_batch(pad_instances(instances), algo=algo)
+    host = evaluate_host(instances, algo=algo)
+    np.testing.assert_allclose(np.asarray(v_b), np.asarray(v_g, np.float64),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v_b), host, atol=1e-4)
+    # per-instance placements are at the bucket envelope, pads untouched
+    for inst, x in zip(instances, x_b):
+        env = bucket_envelope(inst.U, inst.P, inst.E)
+        x = np.asarray(x)
+        assert x.shape == (env[2], env[1])
+        assert not x[:, inst.P:].any() and not x[inst.E:, :].any()
+    return bb
+
+
+def test_bucketed_evaluator_matches_global_pad_and_host():
+    insts = _mixed_instances([(20, 0), (160, 1), (40, 2), (20, 3), (90, 4)])
+    bb = _check_bucketed_matches_global_and_host(insts)
+    assert bb.B == 5 and len(bb.buckets) >= 2  # sizes actually spread
+    assert 0.0 <= bb.pad_waste < 1.0
+
+
+def test_bucketed_single_instance_and_identical_sizes():
+    one = _mixed_instances([(30, 7)])
+    bb = _check_bucketed_matches_global_and_host(one)
+    assert len(bb.buckets) == 1 and bb.pad_waste >= 0.0
+    # identical dims (same seed → same catalog) collapse to one bucket
+    same = [synthetic_instance(n_users=30, n_edges=3, seed=9)
+            for _ in range(4)]
+    bb = _check_bucketed_matches_global_and_host(same)
+    assert len(bb.buckets) == 1
+    assert all(len(i) == 4 for i in bb.index)
+
+
+def test_bucketed_agp_path_matches_host_too():
+    insts = _mixed_instances([(24, 0), (100, 1)])
+    _check_bucketed_matches_global_and_host(insts, algo="agp")
+
+
+def test_bucket_envelope_is_chunk_independent():
+    """An instance's envelope depends only on its own dims — evaluating it
+    in any batch composition gives bit-identical values (the property the
+    sweep store's resume/fleet merge relies on)."""
+    insts = _mixed_instances([(20, 0), (160, 1), (40, 2), (20, 3), (90, 4)])
+    v_all, _ = evaluate_batch(bucket_instances(insts))
+    for lo, hi in ((0, 2), (2, 5), (1, 4)):
+        v_part, _ = evaluate_batch(bucket_instances(insts[lo:hi]))
+        np.testing.assert_array_equal(np.asarray(v_part),
+                                      np.asarray(v_all)[lo:hi])
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.lists(st.tuples(st.integers(8, 200), st.integers(0, 50)),
+                min_size=1, max_size=6), st.integers(0, 1))
+def test_bucketed_property_random_mixes(sizes_seeds, algo_i):
+    _check_bucketed_matches_global_and_host(
+        _mixed_instances(sizes_seeds), algo=("egp", "agp")[algo_i])
 
 
 # ===========================================================================
