@@ -1,0 +1,48 @@
+"""Gateway soak benchmark: the live control plane under sustained load.
+
+Wraps :func:`repro.gateway.soak.run_soak` as a ``benchmarks/run.py`` row:
+an open-loop trace replay is wired into a wall-clock gateway inside one
+event loop and run for a fixed wall budget at a multiple of the trace's
+native request rate. The row's quality fields are the *operational
+invariants* (tick count, bounded backlog, no ingress drops, admitted
+fraction); sustained RPS and the p99 admission / loop-lag latencies are
+machine-dependent and carry timing suffixes so the CI ``--compare`` gate
+bounds them by ``--max-slowdown`` only.
+
+* **mini** (CI gate): a shrunk ``flash_crowd`` catalog at 20× for ~2 s —
+  measures control-plane overhead, not placement scale, and keeps the
+  gate fast.
+* **full**: the ISSUE acceptance bar — ``trace_replay_bursty`` at 10×
+  its native rate for 30 s wall-clock.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+#: Shrunk catalog for the mini row — the same small-instance family the
+#: tier-1 gateway tests use, so pass/fail tracks the control plane.
+MINI_OVERRIDES = {
+    "n_user_slots": 32, "n_services": 8, "max_impls": 3, "n_edges": 4,
+    "prompt_tokens": 768, "new_tokens": 64, "max_batch": 4,
+}
+
+
+def run(*, full: bool = False, seed: int = 0,
+        verbose: bool = True) -> Dict:
+    """One judged soak; returns ``SoakReport.to_json()`` plus the knobs."""
+    from repro.gateway import run_soak
+
+    if full:
+        report = run_soak("trace_replay_bursty", seed=seed,
+                          policy="feedback", speed=10.0, duration_s=30.0)
+    else:
+        report = run_soak("flash_crowd", seed=seed, policy="feedback",
+                          speed=20.0, duration_s=2.0,
+                          overrides=dict(MINI_OVERRIDES))
+    if verbose:
+        print(report.line(), flush=True)
+    return report.to_json()
+
+
+if __name__ == "__main__":
+    run(verbose=True)

@@ -122,7 +122,11 @@ def run(us: Sequence[int] = (1000,), dense_max_u: int = 20_000,
 
     out["rel_diff_paper"] = max(rel_diffs) if rel_diffs else None
 
-    if bucket_mix:
+    # the mixed-size batch runs through the *dense* evaluator, so it is
+    # subject to the same memory wall as the dense column — skip it when
+    # even the smallest requested U is past dense_max_u (e.g. a measured
+    # 10^6 sparse-only run)
+    if bucket_mix and min(us) <= dense_max_u:
         from repro.workloads import (bucket_instances, evaluate_batch,
                                      pad_instances)
         U0 = int(min(us))

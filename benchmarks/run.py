@@ -49,8 +49,8 @@ BENCH_TRAJ_SCHEMA_VERSION = 1
 #: the kernel_* micro rows).
 ROW_GROUPS = ("fig3_validation", "fig4_scale", "fig5_realworld",
               "serving_horizon", "tuning_fit", "fleet_scaling",
-              "scenario_sweep", "placement_scale", "kernels",
-              "obs_overhead", "roofline_table")
+              "scenario_sweep", "placement_scale", "gateway_soak",
+              "kernels", "obs_overhead", "roofline_table")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -119,6 +119,10 @@ def main() -> int:
     ap.add_argument("--trajectory", default=None, metavar="PATH",
                     help="append this run's rows to a schema-versioned "
                          "JSONL trajectory file")
+    ap.add_argument("--placement-us", default=None, metavar="U1,U2,...",
+                    help="placement_scale: comma list of user counts to "
+                         "measure, overriding the mini/full grids (e.g. "
+                         "1000000 for a measured 10^6 sparse row)")
     args = ap.parse_args()
     trials3 = 10 if args.full else 4
     trials4 = 100 if args.full else 3
@@ -241,6 +245,9 @@ def main() -> int:
     if want("placement_scale"):
         from benchmarks import placement_scale
         ps_us = (1000, 10_000, 100_000) if args.full else (1000,)
+        if args.placement_us:
+            ps_us = tuple(int(s) for s in args.placement_us.split(",")
+                          if s.strip())
         t0 = time.perf_counter()
         ps = placement_scale.run(us=ps_us, verbose=False)
         dt = (time.perf_counter() - t0) * 1e6 / len(ps_us)
@@ -255,6 +262,18 @@ def main() -> int:
             # row the CI --compare gate checks as a quality field
             if args.full and "speedup" in rec:
                 parts.append(f"speedup_{lbl}={rec['speedup']:.1f}")
+        if "u1000k" not in ps["per_u"]:
+            # the 10^6 cell's memory story stays in the mini gate even
+            # when the cell isn't run: the bytes models are exact given
+            # the catalog shape (P, k), which any measured U pins down —
+            # the measured 10^6 row itself lives in the trajectory
+            # (--placement-us 1000000)
+            r0 = next(iter(ps["per_u"].values()))
+            u6, e6 = 1_000_000, max(10, 1_000_000 // 1000)
+            ratio6 = (placement_scale.dense_bytes(u6, r0["P"], e6)
+                      / placement_scale.sparse_bytes(u6, r0["P"], e6,
+                                                     r0["k"]))
+            parts.append(f"mem_ratio_u1000k={ratio6:.0f}")
         if ps["rel_diff_paper"] is not None:
             parts.append(f"rel_diff_paper={ps['rel_diff_paper']:.2e}")
         bm = ps.get("bucket_mix")
@@ -263,6 +282,24 @@ def main() -> int:
                          f";global_pad_ms={bm['global_ms']:.2f}"
                          f";pad_waste_pct={bm['pad_waste'] * 100:.1f}")
         emit("placement_scale", dt, ";".join(parts))
+
+    if want("gateway_soak"):
+        from benchmarks import gateway_soak
+        t0 = time.perf_counter()
+        gs = gateway_soak.run(full=args.full, verbose=False)
+        dt = (time.perf_counter() - t0) * 1e6 / max(gs["ticks"], 1)
+        # ticks / bounded / drops / admitted fraction are the soak's
+        # operational invariants (quality fields); throughput and the
+        # latency quantiles are machine speed (timing suffixes)
+        emit("gateway_soak", dt,
+             f"ticks={gs['ticks']}"
+             f";bounded={int(gs['bounded'])}"
+             f";ok={int(gs['ok'])}"
+             f";dropped={gs['dropped_ingress']}"
+             f";admitted_frac={gs['admitted'] / max(gs['sent'], 1):.3f}"
+             f";admitted_per_s={gs['sustained_rps']:.1f}"
+             f";p99_admission_ms={gs['p99_admission_ms']:.2f}"
+             f";p99_lag_ms={gs['p99_loop_lag_ms']:.2f}")
 
     if want("kernels"):
         from benchmarks import kernels_micro

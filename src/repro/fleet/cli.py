@@ -72,6 +72,7 @@ def _cmd_worker(args: argparse.Namespace) -> int:
     summary = run_worker(args.root, owner=owner, ttl=args.ttl,
                          max_tasks=args.max_tasks,
                          memory_budget_mb=args.memory_budget_mb,
+                         wait=args.wait, poll_interval=args.poll_interval,
                          verbose=args.verbose)
     if not args.verbose:
         print(f"[fleet:{summary['owner']}] {summary['n_tasks']} task(s), "
@@ -218,6 +219,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     wk.add_argument("--memory-budget-mb", type=float, default=None,
                     help="accelerator memory budget per in-flight chunk "
                          "(default: the sweep engine's)")
+    wk.add_argument("--wait", action="store_true",
+                    help="long-poll an empty queue for the next plan "
+                         "wave instead of exiting (elastic fleets); "
+                         "exit via SIGTERM drain or --max-tasks")
+    wk.add_argument("--poll-interval", type=float, default=2.0,
+                    help="--wait polling period in seconds")
     wk.add_argument("--verbose", action="store_true")
     wk.set_defaults(fn=_cmd_worker)
 

@@ -111,13 +111,19 @@ def run_worker(fleet_root: os.PathLike | str, *,
                max_tasks: Optional[int] = None,
                memory_budget_mb: Optional[float] = None,
                install_signal_handlers: bool = True,
+               wait: bool = False,
+               poll_interval: float = 2.0,
                verbose: bool = False) -> Dict[str, Any]:
     """Drain the fleet queue from this process; returns a run summary.
 
     Exits when the queue has no claimable *or* reapable work left (other
     workers' live leases are not waited on — the coordinator's final
     ``merge``/``run_sweep`` pass covers stragglers), after ``max_tasks``
-    tasks, or on a clean SIGTERM drain.
+    tasks, or on a clean SIGTERM drain. With ``wait=True`` an empty
+    queue is not an exit: the worker long-polls every ``poll_interval``
+    seconds for the next plan wave (elastic fleets keep their workers
+    across waves), so the only exits are SIGTERM/SIGINT (clean drain)
+    and ``max_tasks``.
     """
     fleet_root = Path(fleet_root)
     owner = owner or default_owner()
@@ -142,11 +148,24 @@ def run_worker(fleet_root: os.PathLike | str, *,
     try:
         return _worker_loop(queue, spec, store_dir, owner, stop,
                             max_tasks, memory_budget_mb, verbose,
-                            telemetry=WorkerTelemetry(fleet_root, owner))
+                            telemetry=WorkerTelemetry(fleet_root, owner),
+                            wait=wait, poll_interval=poll_interval)
     finally:
         # an in-process caller (tests, benchmarks) keeps its own Ctrl-C
         for sig, handler in previous_handlers.items():
             signal.signal(sig, handler)
+
+
+def _poll_sleep(stop: Dict[str, Any], interval: float) -> None:
+    """Sleep ``interval`` seconds in short slices so a SIGTERM drain
+    request interrupts the long-poll promptly instead of after a full
+    poll period."""
+    deadline = time.perf_counter() + max(interval, 0.0)
+    while stop["reason"] is None:
+        remain = deadline - time.perf_counter()
+        if remain <= 0:
+            return
+        time.sleep(min(remain, 0.2))
 
 
 def _worker_loop(queue: LeaseQueue, spec: SweepSpec, store_dir: Path,
@@ -154,8 +173,9 @@ def _worker_loop(queue: LeaseQueue, spec: SweepSpec, store_dir: Path,
                  max_tasks: Optional[int],
                  memory_budget_mb: Optional[float],
                  verbose: bool,
-                 telemetry: Optional[WorkerTelemetry] = None
-                 ) -> Dict[str, Any]:
+                 telemetry: Optional[WorkerTelemetry] = None,
+                 wait: bool = False,
+                 poll_interval: float = 2.0) -> Dict[str, Any]:
     executed: List[str] = []
     items = 0
     t0 = time.perf_counter()
@@ -169,6 +189,10 @@ def _worker_loop(queue: LeaseQueue, spec: SweepSpec, store_dir: Path,
         if lease is None:
             # nothing claimable: pick up crashed workers' chunks, else done
             if queue.reap():
+                continue
+            if wait:
+                # elastic fleets: survive the gap between plan waves
+                _poll_sleep(stop, poll_interval)
                 continue
             stop["reason"] = "drained"
             break

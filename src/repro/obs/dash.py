@@ -40,6 +40,9 @@ class DashState:
         #: (scenario, seed, policy) -> latest tick payload + timing
         self.ticks: Dict[tuple, Dict[str, Any]] = {}
         self.workers: Dict[str, Mapping[str, Any]] = {}
+        #: (scenario, seed, policy) -> latest gateway payload (live
+        #: control plane: repro.gateway per-tick operational frames)
+        self.gateways: Dict[tuple, Dict[str, Any]] = {}
         self.chunks = {"n": 0, "items": 0}
         self.counters: Dict[str, float] = {}
         self.last_t: Optional[float] = None
@@ -60,6 +63,14 @@ class DashState:
             key = (payload.get("scenario"), payload.get("seed"),
                    payload.get("policy"))
             cell = self.ticks.setdefault(
+                key, {"first_t": t, "n_ticks": 0})
+            cell.update(payload)
+            cell["n_ticks"] += 1
+            cell["last_t"] = t
+        elif kind == "gateway":
+            key = (payload.get("scenario"), payload.get("seed"),
+                   payload.get("policy"))
+            cell = self.gateways.setdefault(
                 key, {"first_t": t, "n_ticks": 0})
             cell.update(payload)
             cell["n_ticks"] += 1
@@ -112,6 +123,24 @@ def render(state: DashState, *, slos: Iterable[SLO] = DEFAULT_SLOS,
                 f"{cell.get('dropped', 0):>5}")
     else:
         out.append(" (no tick frames yet)")
+
+    if state.gateways:
+        out.append("")
+        out.append(f" {'gateway':<20} {'mode':>5} {'spd':>5} {'tick':>5} "
+                   f"{'adm':>6} {'ingr':>5} {'lag ms':>7} {'drop':>5} "
+                   f"{'late':>5}")
+        for (scenario, seed, policy), cell in sorted(
+                state.gateways.items(), key=lambda kv: str(kv[0])):
+            out.append(
+                f" {f'{scenario}/s{seed}':<20} "
+                f"{str(cell.get('mode', '?'))[:5]:>5} "
+                f"{_fmt(cell.get('speed'), '.3g', 5)} "
+                f"{cell.get('tick', 0):>5} "
+                f"{cell.get('requests', 0):>6} "
+                f"{cell.get('ingress_depth', 0):>5} "
+                f"{_fmt(cell.get('loop_lag_ms'), '.2f')} "
+                f"{cell.get('dropped_ingress', 0):>5} "
+                f"{cell.get('late', 0):>5}")
 
     if state.workers:
         out.append("")

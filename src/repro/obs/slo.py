@@ -15,6 +15,9 @@ Metric selectors (the ``metric`` field):
 - ``tick.<field>`` — a field of ``tick`` stream frames (``miss_rate``,
   ``queue_depth``, ``window_qos``, ...), aggregated over the sliding
   ``window_s`` by ``agg`` (mean/max/min/last);
+- ``gateway.<field>`` — same windowed aggregation over ``gateway``
+  frames (the live control plane's per-tick operational stats:
+  ``ingress_depth``, ``loop_lag_ms``, ``admitted``, ...);
 - ``hist.<name>.<pXX|mean|count>`` — a digest of the named histogram,
   merged across label sets, from a ``metrics`` frame or snapshot records;
 - ``counter.<name>`` — a tracer counter value;
@@ -122,6 +125,18 @@ DEFAULT_SLOS = (
         max_value=1e-4),
     SLO("placement-mem-ratio", "bench.placement_scale.mem_ratio_u1k",
         min_value=10.0),
+    # Live control plane (repro.gateway): the event loop must hit its
+    # tick deadlines, requests must clear ingest promptly, and the
+    # ingress queue must stay bounded. Histogram selectors read the
+    # gateway's periodic ``metrics`` frames; the depth bound reads the
+    # per-tick ``gateway`` frames. All three are vacuously ok (n=0)
+    # when no gateway is running.
+    SLO("gateway-loop-lag-p99", "hist.gateway.loop_lag_ms.p99",
+        max_value=250.0),
+    SLO("gateway-admission-p99", "hist.gateway.admission_ms.p99",
+        max_value=500.0),
+    SLO("gateway-ingress-depth", "gateway.ingress_depth",
+        max_value=4096, agg="max"),
 )
 
 
@@ -136,8 +151,8 @@ def load_slos(path) -> List[SLO]:
 
 
 def _windowed(frames: Sequence[Mapping[str, Any]], field: str,
-              window_s: float) -> List[float]:
-    ticks = [f for f in frames if f.get("type") == "tick"
+              window_s: float, type_: str = "tick") -> List[float]:
+    ticks = [f for f in frames if f.get("type") == type_
              and field in f.get("payload", {})]
     if not ticks:
         return []
@@ -177,13 +192,15 @@ def _resolve(slo: SLO, frames: Sequence[Mapping[str, Any]],
              ) -> tuple:
     """(value, n_samples) for one SLO against the supplied sources."""
     metric = slo.metric
-    if metric.startswith("tick."):
-        samples = _windowed(frames, metric[len("tick."):], slo.window_s)
-        if not samples:
-            return float("nan"), 0
-        agg = {"mean": lambda s: sum(s) / len(s), "max": max, "min": min,
-               "last": lambda s: s[-1]}[slo.agg]
-        return float(agg(samples)), len(samples)
+    for prefix in ("tick.", "gateway."):
+        if metric.startswith(prefix):
+            samples = _windowed(frames, metric[len(prefix):],
+                                slo.window_s, type_=prefix[:-1])
+            if not samples:
+                return float("nan"), 0
+            agg = {"mean": lambda s: sum(s) / len(s), "max": max,
+                   "min": min, "last": lambda s: s[-1]}[slo.agg]
+            return float(agg(samples)), len(samples)
     if metric.startswith("hist."):
         name, _, digest = metric[len("hist."):].rpartition(".")
         h = _merged_histogram(metrics, name)

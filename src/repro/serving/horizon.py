@@ -47,6 +47,16 @@ Everything is a pure function of ``(config, seed)``: same seed →
 byte-identical per-request finish times, which is what lets
 ``repro.sweeps`` (kind ``"serving"``) resume killed sweeps item-granularly
 by replaying a seed's horizon.
+
+The per-tick body lives in :class:`TickController` so two drivers can
+share it bit-for-bit: :func:`run_horizon` (offline — materializes each
+tick's instance from the scenario and loops as fast as the CPU allows)
+and the live asyncio gateway (:mod:`repro.gateway` — rebuilds each
+tick's instance from requests that physically arrived over a socket,
+paced by a wall or virtual clock). The gateway's determinism invariant
+is exactly this factoring: on a virtual clock with a seeded load
+generator it performs the same controller calls in the same order, so
+its ``TickReport``\\ s are byte-identical to the offline horizon's.
 """
 from __future__ import annotations
 
@@ -65,7 +75,8 @@ from .scheduler import (ArrivingRequest, ContinuousScheduler,
                         ExecutorProfile, realized_qos_np)
 
 __all__ = ["SERVING_PARAM_KEYS", "HorizonConfig", "TickReport",
-           "HorizonResult", "run_horizon", "split_serving_overrides"]
+           "HorizonResult", "TickController", "run_horizon",
+           "split_serving_overrides"]
 
 #: Override keys consumed by the serving driver (everything else is a
 #: scenario/instance override). The sweep spec routes a flat override
@@ -312,42 +323,84 @@ def run_horizon(config: HorizonConfig) -> HorizonResult:
         return _run_horizon(config)
 
 
-def _run_horizon(config: HorizonConfig) -> HorizonResult:
-    from repro.workloads import get_scenario  # deferred: workloads uses core
+class TickController:
+    """The stateful per-tick serving control loop, driver-agnostic.
 
-    sc = get_scenario(config.scenario, **dict(config.overrides))
-    T = int(config.n_ticks or sc.n_ticks)
-    feedback = config.policy == "feedback"
-    if feedback:
-        # deferred import: repro.tuning imports serving modules at top level
-        from repro.tuning.controller import FeedbackPlacer
-        placer = FeedbackPlacer(
-            config.switching_cost, config.stickiness,
-            gain=config.feedback_gain, ewma=config.feedback_ewma,
-            target_miss=config.feedback_target_miss)
-    else:
-        placer = DynamicPlacer(config.switching_cost, config.stickiness)
-    # the feedback policy adapts the *placer*; its queue stays QoS-aware
-    sched = ContinuousScheduler(policy="edf" if feedback else config.policy)
+    One instance owns everything a control plane carries across ticks:
+    the placer (open-loop :class:`~repro.core.dynamic.DynamicPlacer` or
+    closed-loop feedback), the stateful
+    :class:`~repro.serving.scheduler.ContinuousScheduler`, per-tick
+    request/meta bookkeeping, and the live-stream / feedback completion
+    pointers. Drivers differ only in *where each tick's instance comes
+    from* and *when* :meth:`step` runs:
 
-    mobility_cache = sc.mobility_trajectory(config.seed, T)
+    * the offline horizon calls :meth:`materialize` (scenario-derived
+      instance) and steps in a tight loop;
+    * the live gateway (:mod:`repro.gateway`) rebuilds the instance from
+      requests that arrived over its ingest socket and steps at
+      clock-paced tick boundaries, passing the requests' carried arrival
+      timestamps via ``times``.
 
-    tick_reqs: List[List[ArrivingRequest]] = []
-    meta: List[Dict[str, Any]] = []
-    boundary: List[Tuple[int, int]] = []   # (queue_depth, in_flight) per tick
-    uid = 0
-    done_ptr = 0   # completions already fed back to the controller
-    stream_ptr = 0  # completions already published to the live stream
-    for t in range(T):
+    Identical call sequences produce byte-identical results — the
+    gateway's virtual-clock parity guarantee rests on this class.
+    """
+
+    def __init__(self, config: HorizonConfig):
+        from repro.workloads import get_scenario  # deferred: uses core
+
+        self.config = config
+        self.scenario = get_scenario(config.scenario,
+                                     **dict(config.overrides))
+        self.n_ticks = int(config.n_ticks or self.scenario.n_ticks)
+        self.feedback = config.policy == "feedback"
+        if self.feedback:
+            # deferred import: repro.tuning imports serving at top level
+            from repro.tuning.controller import FeedbackPlacer
+            self.placer = FeedbackPlacer(
+                config.switching_cost, config.stickiness,
+                gain=config.feedback_gain, ewma=config.feedback_ewma,
+                target_miss=config.feedback_target_miss)
+        else:
+            self.placer = DynamicPlacer(config.switching_cost,
+                                        config.stickiness)
+        # the feedback policy adapts the *placer*; queue stays QoS-aware
+        self.sched = ContinuousScheduler(
+            policy="edf" if self.feedback else config.policy)
+        self.mobility_cache = self.scenario.mobility_trajectory(
+            config.seed, self.n_ticks)
+
+        self.tick_reqs: List[List[ArrivingRequest]] = []
+        self.meta: List[Dict[str, Any]] = []
+        #: (queue_depth, in_flight) at each tick boundary
+        self.boundary: List[Tuple[int, int]] = []
+        self.uid = 0
+        self._done_ptr = 0    # completions already fed to the controller
+        self._stream_ptr = 0  # completions already published to the stream
+
+    # -- tick inputs -------------------------------------------------------
+    def materialize(self, t: int) -> PIESInstance:
+        """The offline path: tick ``t``'s instance from the scenario."""
         with obs.span("tick.materialize", tick=t):
-            inst = sc.instance_at(config.seed, t,
-                                  mobility_cache=mobility_cache)
+            return self.scenario.instance_at(
+                self.config.seed, t, mobility_cache=self.mobility_cache)
+
+    # -- the control step --------------------------------------------------
+    def step(self, t: int, inst: PIESInstance,
+             times: Optional[np.ndarray] = None) -> None:
+        """Place → route → execute one control tick.
+
+        ``times`` (sorted [U] arrival timestamps) defaults to the
+        scenario's arrival process — the offline path; the gateway passes
+        the timestamps its admitted requests actually carried.
+        """
+        config, sc, placer, sched = (self.config, self.scenario,
+                                     self.placer, self.sched)
         with obs.span("tick.place", tick=t):
             with obs.kernel_span("qos_matrix_np", U=inst.U, P=inst.P):
                 Q = qos_matrix_np(inst)
             x, value, loads = placer.step(inst, Q)
-            applied_stickiness = placer.current_stickiness if feedback \
-                else config.stickiness
+            applied_stickiness = placer.current_stickiness \
+                if self.feedback else config.stickiness
             # cold starts: every implementation the placer just loaded
             # spends the first switching_cost seconds of the tick loading
             # and serves nothing until then — gated up front, so an impl
@@ -366,11 +419,13 @@ def _run_horizon(config: HorizonConfig) -> HorizonResult:
             n_requeued = 0
             if placer.evicted is not None and placer.evicted.any():
                 n_requeued = _requeue_evicted(sched, placer.evicted, inst,
-                                              x, config, tick_reqs, meta)
+                                              x, config, self.tick_reqs,
+                                              self.meta)
             y, _ = oms_np(inst, x, Q)
 
-            times = _arrival_times(sc, config.seed, t, inst.U,
-                                   config.tick_duration)
+            if times is None:
+                times = _arrival_times(sc, config.seed, t, inst.U,
+                                       config.tick_duration)
             reqs: List[ArrivingRequest] = []
             for u in range(inst.U):
                 p = int(y[u])
@@ -382,27 +437,29 @@ def _run_horizon(config: HorizonConfig) -> HorizonResult:
                         (e, p), ExecutorProfile.from_comp_cost(
                             float(inst.sm_w[p]), config.max_batch))
                 reqs.append(ArrivingRequest(
-                    uid=uid + u, impl=p, edge=e, arrival=float(times[u]),
+                    uid=self.uid + u, impl=p, edge=e,
+                    arrival=float(times[u]),
                     prompt_tokens=config.prompt_tokens,
                     new_tokens=config.new_tokens,
                     alpha=float(inst.u_alpha[u]),
                     delta=float(inst.u_delta[u]),
                     accuracy=float(inst.sm_acc[p]),
                     service=int(inst.u_service[u])))
-            uid += inst.U
+            self.uid += inst.U
         with obs.span("tick.execute", tick=t):
             sched.submit(reqs)
             sched.run_until((t + 1) * config.tick_duration)
 
-        tick_reqs.append(reqs)
-        boundary.append((sched.queue_depth(), sched.in_flight()))
-        obs.sample("serving.queue_depth", boundary[-1][0])
-        obs.sample("serving.in_flight", boundary[-1][1])
-        meta.append({"submitted": inst.U, "dropped": int((y < 0).sum()),
-                     "loads": loads, "value": float(value),
-                     "delta_max": float(inst.delta_max),
-                     "requeued": n_requeued,
-                     "stickiness": float(applied_stickiness)})
+        self.tick_reqs.append(reqs)
+        self.boundary.append((sched.queue_depth(), sched.in_flight()))
+        obs.sample("serving.queue_depth", self.boundary[-1][0])
+        obs.sample("serving.in_flight", self.boundary[-1][1])
+        self.meta.append({"submitted": inst.U,
+                          "dropped": int((y < 0).sum()),
+                          "loads": loads, "value": float(value),
+                          "delta_max": float(inst.delta_max),
+                          "requeued": n_requeued,
+                          "stickiness": float(applied_stickiness)})
 
         pub = obs.get_publisher()
         if pub is not None:
@@ -410,8 +467,8 @@ def _run_horizon(config: HorizonConfig) -> HorizonResult:
             # this tick (final arrival-attributed reports only exist
             # after the drain) — a pure read of scheduler state, so the
             # stream-on run stays byte-identical to stream-off
-            window = sched.completed[stream_ptr:]
-            stream_ptr = len(sched.completed)
+            window = sched.completed[self._stream_ptr:]
+            self._stream_ptr = len(sched.completed)
             window_qos = window_miss = None
             if window:
                 w_lats = np.maximum(np.array(
@@ -426,18 +483,19 @@ def _run_horizon(config: HorizonConfig) -> HorizonResult:
             pub.emit("tick", {
                 "scenario": config.scenario, "seed": config.seed,
                 "policy": config.policy, "tick": t,
-                "submitted": int(inst.U), "dropped": meta[-1]["dropped"],
-                "queue_depth": boundary[-1][0],
-                "in_flight": boundary[-1][1],
+                "submitted": int(inst.U),
+                "dropped": self.meta[-1]["dropped"],
+                "queue_depth": self.boundary[-1][0],
+                "in_flight": self.boundary[-1][1],
                 "completed": len(window), "window_qos": window_qos,
                 "miss_rate": window_miss, "requeued": n_requeued,
                 "model_loads": loads})
 
-        if feedback:
+        if self.feedback:
             # close the loop on what actually *completed* this tick — the
             # only signal a real controller has mid-run
-            window = sched.completed[done_ptr:]
-            done_ptr = len(sched.completed)
+            window = sched.completed[self._done_ptr:]
+            self._done_ptr = len(sched.completed)
             if window:
                 w_lats = np.maximum(
                     np.array([r.finish - r.arrival for r in window]), 0.0)
@@ -449,72 +507,123 @@ def _run_horizon(config: HorizonConfig) -> HorizonResult:
                 placer.observe(float(w_qos.mean()), float(w_miss.mean()),
                                len(window))
 
-    # Backlog left at the horizon end drains to completion (graceful
-    # shutdown); its requests stay attributed to their arrival ticks.
-    with obs.span("horizon.drain"):
-        sched.drain()
+    def step_idle(self, t: int) -> None:
+        """Advance one tick boundary with no admitted requests.
 
-    tracer = obs.get_tracer()
-    lat_hist = tracer.metrics.histogram(
-        "serving.latency_s", scenario=config.scenario,
-        policy=config.policy) if tracer is not None else None
-    per_tick: List[TickReport] = []
-    for t in range(T):
-        reqs, m = tick_reqs[t], meta[t]
-        if reqs:
-            lats = np.maximum(
-                np.array([r.finish - r.arrival for r in reqs]), 0.0)
-            qos, missed = realized_qos_np(
-                lats, np.array([r.delta for r in reqs]),
-                np.array([r.accuracy for r in reqs]),
-                np.array([r.alpha for r in reqs]), m["delta_max"])
-        else:
-            lats, qos, missed = np.zeros(0), np.zeros(0), np.zeros(0, bool)
-        if lat_hist is not None:
-            lat_hist.observe_many(lats)
-        per_tick.append(TickReport(
-            tick=t, submitted=m["submitted"], served=len(reqs),
-            dropped=m["dropped"],
-            # dropped requests contribute 0 — divide by ALL submitted
-            mean_realized_qos=float(qos.sum() / m["submitted"])
-            if m["submitted"] else 0.0,
-            deadline_misses=int(missed.sum()),
-            mean_latency_s=float(lats.mean()) if reqs else float("nan"),
-            queue_depth=boundary[t][0], in_flight=boundary[t][1],
-            model_loads=m["loads"], placement_value=m["value"],
-            requeued=m["requeued"], stickiness=m["stickiness"],
-            mean_accuracy=float(np.mean([r.accuracy for r in reqs]))
-            if reqs else float("nan")))
+        Gateway-only resilience path: a wall-clock gateway can hit a
+        tick boundary before any of the tick's requests physically
+        arrived (a stalled load generator). The offline horizon never
+        produces an empty tick (the population floor is one user), so
+        the placement is simply left untouched, the scheduler still runs
+        to the boundary (in-flight work completes), and the tick reports
+        zero submissions.
+        """
+        config, sched = self.config, self.sched
+        with obs.span("tick.execute", tick=t):
+            sched.run_until((t + 1) * config.tick_duration)
+        self.tick_reqs.append([])
+        self.boundary.append((sched.queue_depth(), sched.in_flight()))
+        obs.sample("serving.queue_depth", self.boundary[-1][0])
+        obs.sample("serving.in_flight", self.boundary[-1][1])
+        self.meta.append({"submitted": 0, "dropped": 0, "loads": 0,
+                          "value": 0.0, "delta_max": 0.0, "requeued": 0,
+                          "stickiness": float(config.stickiness)})
+        pub = obs.get_publisher()
+        if pub is not None:
+            window = sched.completed[self._stream_ptr:]
+            self._stream_ptr = len(sched.completed)
+            pub.emit("tick", {
+                "scenario": config.scenario, "seed": config.seed,
+                "policy": config.policy, "tick": t, "submitted": 0,
+                "dropped": 0, "queue_depth": self.boundary[-1][0],
+                "in_flight": self.boundary[-1][1],
+                "completed": len(window), "window_qos": None,
+                "miss_rate": None, "requeued": 0, "model_loads": 0})
 
-    if tracer is not None:
-        for rep in per_tick:
-            obs.sample("serving.realized_qos", rep.mean_realized_qos)
-        tracer.metrics.gauge(
-            "serving.realized_qos", scenario=config.scenario,
-            policy=config.policy).set(
-                float(sum(r.mean_realized_qos * r.submitted
-                          for r in per_tick) /
-                      max(sum(r.submitted for r in per_tick), 1)))
-        obs.count("serving.submitted",
-                  sum(r.submitted for r in per_tick))
-        obs.count("serving.deadline_misses",
-                  sum(r.deadline_misses for r in per_tick))
-        obs.count("serving.requeued", sum(r.requeued for r in per_tick))
+    # -- shutdown ----------------------------------------------------------
+    def finalize(self) -> HorizonResult:
+        """Drain the backlog and build the arrival-attributed result."""
+        config, sched = self.config, self.sched
+        tick_reqs, meta, boundary = self.tick_reqs, self.meta, self.boundary
+        T = len(tick_reqs)
+        # Backlog left at the horizon end drains to completion (graceful
+        # shutdown); its requests stay attributed to their arrival ticks.
+        with obs.span("horizon.drain"):
+            sched.drain()
 
-    result = HorizonResult(config=config, per_tick=per_tick,
-                           requests=[r for reqs in tick_reqs for r in reqs])
-    pub = obs.get_publisher()
-    if pub is not None:
-        # end-of-run summary: the *final* arrival-attributed numbers the
-        # provisional tick frames converged toward
-        pub.emit("horizon", {
-            "scenario": config.scenario, "seed": config.seed,
-            "policy": config.policy, "n_ticks": T,
-            "submitted": result.submitted, "served": result.served,
-            "dropped": result.dropped,
-            "deadline_misses": result.deadline_misses,
-            "mean_realized_qos": result.mean_realized_qos,
-            "miss_rate": result.miss_rate})
+        tracer = obs.get_tracer()
+        lat_hist = tracer.metrics.histogram(
+            "serving.latency_s", scenario=config.scenario,
+            policy=config.policy) if tracer is not None else None
+        per_tick: List[TickReport] = []
+        for t in range(T):
+            reqs, m = tick_reqs[t], meta[t]
+            if reqs:
+                lats = np.maximum(
+                    np.array([r.finish - r.arrival for r in reqs]), 0.0)
+                qos, missed = realized_qos_np(
+                    lats, np.array([r.delta for r in reqs]),
+                    np.array([r.accuracy for r in reqs]),
+                    np.array([r.alpha for r in reqs]), m["delta_max"])
+            else:
+                lats, qos, missed = (np.zeros(0), np.zeros(0),
+                                     np.zeros(0, bool))
+            if lat_hist is not None:
+                lat_hist.observe_many(lats)
+            per_tick.append(TickReport(
+                tick=t, submitted=m["submitted"], served=len(reqs),
+                dropped=m["dropped"],
+                # dropped requests contribute 0 — divide by ALL submitted
+                mean_realized_qos=float(qos.sum() / m["submitted"])
+                if m["submitted"] else 0.0,
+                deadline_misses=int(missed.sum()),
+                mean_latency_s=float(lats.mean()) if reqs
+                else float("nan"),
+                queue_depth=boundary[t][0], in_flight=boundary[t][1],
+                model_loads=m["loads"], placement_value=m["value"],
+                requeued=m["requeued"], stickiness=m["stickiness"],
+                mean_accuracy=float(np.mean([r.accuracy for r in reqs]))
+                if reqs else float("nan")))
+
         if tracer is not None:
-            pub.emit_metrics(tracer)
-    return result
+            for rep in per_tick:
+                obs.sample("serving.realized_qos", rep.mean_realized_qos)
+            tracer.metrics.gauge(
+                "serving.realized_qos", scenario=config.scenario,
+                policy=config.policy).set(
+                    float(sum(r.mean_realized_qos * r.submitted
+                              for r in per_tick) /
+                          max(sum(r.submitted for r in per_tick), 1)))
+            obs.count("serving.submitted",
+                      sum(r.submitted for r in per_tick))
+            obs.count("serving.deadline_misses",
+                      sum(r.deadline_misses for r in per_tick))
+            obs.count("serving.requeued",
+                      sum(r.requeued for r in per_tick))
+
+        result = HorizonResult(
+            config=config, per_tick=per_tick,
+            requests=[r for reqs in tick_reqs for r in reqs])
+        pub = obs.get_publisher()
+        if pub is not None:
+            # end-of-run summary: the *final* arrival-attributed numbers
+            # the provisional tick frames converged toward
+            pub.emit("horizon", {
+                "scenario": config.scenario, "seed": config.seed,
+                "policy": config.policy, "n_ticks": T,
+                "submitted": result.submitted, "served": result.served,
+                "dropped": result.dropped,
+                "deadline_misses": result.deadline_misses,
+                "mean_realized_qos": result.mean_realized_qos,
+                "miss_rate": result.miss_rate})
+            if tracer is not None:
+                pub.emit_metrics(tracer)
+        return result
+
+
+def _run_horizon(config: HorizonConfig) -> HorizonResult:
+    """The offline driver: a tight loop over :class:`TickController`."""
+    ctl = TickController(config)
+    for t in range(ctl.n_ticks):
+        ctl.step(t, ctl.materialize(t))
+    return ctl.finalize()

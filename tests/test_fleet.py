@@ -403,6 +403,55 @@ def test_worker_sigterm_is_a_clean_drain(tmp_path):
         assert all(k in store for k in task.keys)
 
 
+def test_worker_wait_survives_empty_queue_and_drains_on_sigterm(tmp_path):
+    """--wait long-polling (elastic fleets): a worker on an empty queue
+    stays alive across plan waves instead of exiting "drained", picks up
+    newly enqueued tasks, and still honors SIGTERM as a clean drain."""
+    spec = _spec(seeds=(0, 1))
+    root = tmp_path / "fleet"
+    plan(spec, root)
+    q = LeaseQueue(root / "queue")
+    tasks_dir = root / "queue" / "tasks"
+    stash = tmp_path / "stash"
+    stash.mkdir()
+    # empty the queue before the worker starts: wave 2 hasn't landed yet
+    staged = list(tasks_dir.iterdir())
+    assert len(staged) == 2
+    for p in staged:
+        p.rename(stash / p.name)
+    proc = subprocess.Popen(
+        _worker_cmd(root, "wait-w") + ["--wait", "--poll-interval", "0.1"],
+        env=_env(), stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+        text=True)
+    try:
+        # several poll periods on an empty queue: a non---wait worker
+        # would have exited "drained" long before this
+        time.sleep(0.6)
+        assert proc.poll() is None
+        # the next plan wave arrives (same content the planner would
+        # regenerate — task names are pure content hashes)
+        for p in list(stash.iterdir()):
+            p.rename(tasks_dir / p.name)
+        deadline = time.time() + 120
+        while len(q.done()) < 2 and time.time() < deadline:
+            time.sleep(0.05)
+        assert len(q.done()) == 2
+        assert proc.poll() is None            # still waiting for wave 3
+        proc.terminate()                      # SIGTERM = clean drain
+        assert proc.wait(timeout=30) == 0
+        out = proc.stdout.read()
+        assert "stop=SIGTERM" in out
+        assert "2 task(s)" in out
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+    assert q.leased() == []                   # nothing orphaned
+    store = SweepStore(worker_store_dir(root, "wait-w"))
+    for name in q.done():
+        assert all(k in store for k in q.read_task(name).keys)
+
+
 # ===========================================================================
 # CLI
 # ===========================================================================

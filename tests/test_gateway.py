@@ -1,0 +1,293 @@
+"""repro.gateway — the live serving control plane: virtual-clock byte
+parity vs the offline horizon, wire-protocol round-trips, TCP ingest,
+the wall-clock soak harness, and the live-telemetry integration (stream
+frames, gateway SLOs, dash pane)."""
+import asyncio
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.gateway import (Gateway, GatewayConfig, RequestEnvelope,
+                           eos_frame, eot_frame, parse_frame,
+                           instance_from_requests, result_digest,
+                           run_loadgen, run_soak, tcp_loadgen,
+                           tick_envelopes)
+from repro.serving.horizon import (HorizonConfig, TickController,
+                                   run_horizon)
+from repro.workloads import get_scenario
+
+SMALL = {"n_user_slots": 32, "n_services": 8, "max_impls": 3, "n_edges": 4}
+LOAD = dict(prompt_tokens=768, new_tokens=64, max_batch=4)
+
+
+def _cfg(**kw):
+    base = dict(scenario="flash_crowd", overrides=tuple(SMALL.items()),
+                policy="edf", seed=0, n_ticks=3, **LOAD)
+    base.update(kw)
+    return HorizonConfig(**base)
+
+
+def _replay(hconfig, **gw_kw):
+    """Virtual-clock in-process replay: loadgen lines → gateway."""
+    gw = Gateway(GatewayConfig(horizon=hconfig, mode="virtual", **gw_kw))
+
+    async def _run():
+        async def send(line):
+            gw.submit_line(line)
+
+        task = asyncio.ensure_future(gw.run())
+        await run_loadgen(send, hconfig, wall=False)
+        return await task
+
+    return asyncio.run(_run()), gw
+
+
+# ===========================================================================
+# Satellite 1: virtual-clock byte parity vs the offline horizon
+# ===========================================================================
+
+@pytest.mark.parametrize("policy", ["edf", "fcfs", "feedback"])
+def test_virtual_clock_parity_byte_identical(policy):
+    """The determinism invariant: a seeded trace replayed through the
+    gateway's JSON wire + virtual clock produces TickReports and request
+    timings byte-identical to run_horizon on the same (config, seed)."""
+    cfg = _cfg(policy=policy, seed=3, n_ticks=4)
+    live, _ = _replay(cfg)
+    offline = run_horizon(cfg)
+    assert result_digest(live) == result_digest(offline)
+    fa = np.array([r.finish for r in live.requests])
+    fb = np.array([r.finish for r in offline.requests])
+    assert fa.tobytes() == fb.tobytes()
+    assert live.tick_values().tobytes() == offline.tick_values().tobytes()
+    for a, b in zip(live.per_tick, offline.per_tick):
+        assert dataclasses.astuple(a) == dataclasses.astuple(b)
+
+
+def test_parity_across_seeds_and_scenarios():
+    for scenario in ("steady", "trace_replay_bursty"):
+        for seed in (0, 7):
+            cfg = _cfg(scenario=scenario, seed=seed, policy="feedback")
+            live, _ = _replay(cfg)
+            assert result_digest(live) == result_digest(run_horizon(cfg))
+
+
+# ===========================================================================
+# Wire protocol
+# ===========================================================================
+
+def test_envelope_wire_roundtrip_is_exact():
+    """JSON floats are repr-shortest-roundtrip: α/δ/arrival survive the
+    wire bit-for-bit — the precondition for instance-level parity."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        env = RequestEnvelope(tick=3, u=1, edge=2, service=5,
+                              alpha=float(rng.random()),
+                              delta=float(rng.random() * 10),
+                              arrival=float(rng.random() * 100))
+        back = RequestEnvelope.from_wire(parse_frame(env.to_line()))
+        assert back == env
+
+
+def test_parse_frame_rejects_garbage():
+    assert parse_frame("") is None
+    assert parse_frame("not json\n") is None
+    assert parse_frame('{"v": 99, "type": "req"}') is None   # bad version
+    assert parse_frame('{"v": 1, "type": "nope"}') is None   # bad type
+    assert parse_frame('[1,2,3]') is None
+    assert parse_frame(json.dumps(
+        {"v": 1, "type": "eot", "tick": 2, "n": 5})) is not None
+
+
+def test_malformed_lines_are_counted_not_fatal():
+    cfg = _cfg(n_ticks=2)
+    gw = Gateway(GatewayConfig(horizon=cfg, mode="virtual"))
+
+    async def _run():
+        async def send(line):
+            gw.submit_line(line)
+
+        task = asyncio.ensure_future(gw.run())
+        gw.submit_line("garbage that is not json\n")
+        await run_loadgen(send, cfg, wall=False)
+        return await task
+
+    result = asyncio.run(_run())
+    assert gw.counters["gateway.malformed"] == 1
+    assert result_digest(result) == result_digest(run_horizon(cfg))
+
+
+def test_instance_from_requests_validates_user_set():
+    sc = get_scenario("flash_crowd", **SMALL)
+    cfg = _cfg()
+    envs = tick_envelopes(sc, cfg, 0)
+    inst, times = instance_from_requests(sc, cfg.seed, 0, envs)
+    ref = sc.instance_at(cfg.seed, 0)
+    np.testing.assert_array_equal(inst.u_edge, ref.u_edge)
+    np.testing.assert_array_equal(inst.u_alpha, ref.u_alpha)
+    assert times.shape == (inst.U,)
+    with pytest.raises(ValueError):
+        instance_from_requests(sc, cfg.seed, 0, [])
+    with pytest.raises(ValueError):    # a hole in the user indexing
+        instance_from_requests(sc, cfg.seed, 0, envs[1:])
+
+
+# ===========================================================================
+# TickController.step_idle (the wall-mode empty-tick path)
+# ===========================================================================
+
+def test_step_idle_keeps_reports_coherent():
+    cfg = _cfg(n_ticks=3)
+    ctl = TickController(cfg)
+    ctl.step(0, ctl.materialize(0))
+    ctl.step_idle(1)
+    ctl.step(2, ctl.materialize(2))
+    res = ctl.finalize()
+    assert len(res.per_tick) == 3
+    assert res.per_tick[1].submitted == 0
+    assert res.per_tick[1].served == 0
+    assert res.per_tick[1].mean_realized_qos == 0.0
+    for t in res.per_tick:
+        assert t.served + t.dropped == t.submitted
+    assert res.served == len(res.requests)
+
+
+# ===========================================================================
+# TCP ingest + wall mode
+# ===========================================================================
+
+def test_tcp_ingest_wall_mode_end_to_end():
+    cfg = _cfg(n_ticks=3, seed=1)
+    gw = Gateway(GatewayConfig(horizon=cfg, mode="wall", speed=50.0))
+
+    async def _run():
+        server = asyncio.ensure_future(gw.serve())
+        while gw.bound_port is None:
+            await asyncio.sleep(0.005)
+        lg = await tcp_loadgen("127.0.0.1", gw.bound_port, cfg,
+                               speed=50.0, n_ticks=3)
+        return await server, lg
+
+    result, lg = asyncio.run(_run())
+    assert lg.ticks == 3
+    assert gw.counters["gateway.admitted"] == lg.sent
+    assert gw.counters["gateway.dropped_ingress"] == 0
+    assert len(result.per_tick) == 3
+    # wall pacing never changes simulation-time semantics
+    assert result.served + result.dropped == result.submitted
+    assert result.submitted == lg.sent
+    # wall mode measured its own operation
+    assert gw.registry.histogram("gateway.loop_lag_ms").count == 3
+    assert gw.registry.histogram("gateway.admission_ms").count == lg.sent
+
+
+def test_wall_mode_empty_run_exits_cleanly():
+    cfg = _cfg(n_ticks=2)
+    gw = Gateway(GatewayConfig(horizon=cfg, mode="wall", speed=10.0,
+                               start_timeout_s=0.05))
+    result = asyncio.run(gw.run())
+    assert result.per_tick == [] and result.requests == []
+
+
+# ===========================================================================
+# Satellite 6 (harness half): the judged soak
+# ===========================================================================
+
+def test_soak_smoke_bounded_and_clean():
+    report = run_soak("flash_crowd", seed=0, policy="feedback",
+                      speed=20.0, duration_s=1.5,
+                      overrides={**SMALL, **LOAD})
+    assert report.ticks >= 10
+    assert report.admitted > 0
+    assert report.admitted == report.sent  # no ingress drops at this rate
+    assert report.bounded and report.ok
+    assert report.sustained_rps > 0
+    assert np.isfinite(report.p99_admission_ms)
+    d = report.to_json()
+    assert d["ok"] is True and "sustained_rps" in d
+    assert "OK" in report.line()
+
+
+# ===========================================================================
+# Satellite 3 glue: stream frames, SLO selectors, dash pane
+# ===========================================================================
+
+def test_gateway_emits_stream_frames(tmp_path):
+    """A live gateway publishes gateway + metrics frames on the PR-7
+    stream — and streaming stays observational (byte-identical result)."""
+    cfg = _cfg(n_ticks=3, seed=2)
+    baseline, _ = _replay(cfg)
+    spec = str(tmp_path / "stream.jsonl")
+    obs.enable_stream(spec, source="gateway-test")
+    try:
+        streamed, _ = _replay(cfg, metrics_every=2)
+    finally:
+        obs.disable_stream()
+    assert result_digest(streamed) == result_digest(baseline)
+    frames = list(obs.read_stream(spec))
+    kinds = [f["type"] for f in frames]
+    assert kinds.count("gateway") == 3
+    assert "metrics" in kinds and "tick" in kinds and "horizon" in kinds
+    gw_frames = [f for f in frames if f["type"] == "gateway"]
+    assert all(f["payload"]["mode"] == "virtual" for f in gw_frames)
+    assert [f["payload"]["tick"] for f in gw_frames] == [0, 1, 2]
+    metrics = [f for f in frames if f["type"] == "metrics"]
+    names = {m["name"] for m in metrics[-1]["payload"]["metrics"]}
+    assert {"gateway.loop_lag_ms", "gateway.admission_ms"} <= names
+    assert "gateway.ticks" in metrics[-1]["payload"]["counters"]
+
+
+def test_gateway_slos_evaluate_on_live_frames():
+    from repro.obs.slo import DEFAULT_SLOS, evaluate_slos
+
+    names = {s.name for s in DEFAULT_SLOS}
+    assert {"gateway-loop-lag-p99", "gateway-admission-p99",
+            "gateway-ingress-depth"} <= names
+    frames = [
+        {"type": "gateway", "t": 10.0,
+         "payload": {"tick": 0, "ingress_depth": 12, "loop_lag_ms": 1.0}},
+        {"type": "gateway", "t": 11.0,
+         "payload": {"tick": 1, "ingress_depth": 40, "loop_lag_ms": 2.0}},
+        {"type": "metrics", "t": 11.5, "payload": {"metrics": [
+            {"kind": "histogram", "name": "gateway.loop_lag_ms",
+             "labels": {}, "growth": 2.0, "min_value": 1e-9,
+             "buckets": {"30": 3}, "count": 3, "sum": 4.0,
+             "min": 1.0, "max": 2.0},
+            {"kind": "histogram", "name": "gateway.admission_ms",
+             "labels": {}, "growth": 2.0, "min_value": 1e-9,
+             "buckets": {"34": 5}, "count": 5, "sum": 60.0,
+             "min": 10.0, "max": 14.0}], "counters": {}}},
+    ]
+    by_name = {r.slo.name: r
+               for r in evaluate_slos(DEFAULT_SLOS, frames=frames)}
+    r = by_name["gateway-ingress-depth"]
+    assert r.n_samples == 2 and r.value == 40.0 and r.ok
+    assert by_name["gateway-loop-lag-p99"].n_samples == 3
+    assert by_name["gateway-loop-lag-p99"].ok
+    assert by_name["gateway-admission-p99"].ok
+    # no gateway traffic → vacuously ok, reported n=0
+    empty = {r.slo.name: r for r in evaluate_slos(DEFAULT_SLOS, frames=[])}
+    assert empty["gateway-ingress-depth"].n_samples == 0
+    assert empty["gateway-ingress-depth"].ok
+
+
+def test_dash_renders_gateway_pane(tmp_path):
+    from repro.obs.dash import DashState, render
+
+    cfg = _cfg(n_ticks=2)
+    spec = str(tmp_path / "stream.jsonl")
+    obs.enable_stream(spec, source="gw")
+    try:
+        _replay(cfg)
+    finally:
+        obs.disable_stream()
+    state = DashState()
+    for frame in obs.read_stream(spec):
+        state.update(frame)
+    screen = render(state)
+    assert "gateway" in screen
+    assert "flash_crowd" in screen
+    # the tick pane still renders too (dash unchanged against a server)
+    assert "tick/s" in screen
