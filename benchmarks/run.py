@@ -50,7 +50,8 @@ BENCH_TRAJ_SCHEMA_VERSION = 1
 ROW_GROUPS = ("fig3_validation", "fig4_scale", "fig5_realworld",
               "serving_horizon", "tuning_fit", "fleet_scaling",
               "scenario_sweep", "placement_scale", "gateway_soak",
-              "kernels", "obs_overhead", "roofline_table")
+              "kernels", "obs_overhead", "obs_request_trace_overhead",
+              "roofline_table")
 
 
 def _parse_derived(derived: str) -> dict:
@@ -314,6 +315,16 @@ def main() -> int:
              f";enabled_pct={ov['enabled_pct']:.2f}"
              f";events={ov['n_events']}"
              f";noop_span_ns={ov['noop_span_ns']:.0f}")
+
+    if want("obs_request_trace_overhead"):
+        from benchmarks import serving_horizon
+        ov = serving_horizon.reqtrace_overhead()
+        # `kept` is deterministic for the fixed (config, seed, sampling)
+        # — the quality field; the rest is machine speed
+        emit("obs_request_trace_overhead", ov["disabled_noop_ns"] / 1e3,
+             f"kept={ov['kept']}"
+             f";disabled_noop_ns={ov['disabled_noop_ns']:.0f}"
+             f";enabled_sampled_pct={ov['enabled_sampled_pct']:.2f}")
 
     if want("roofline_table"):
         from benchmarks import roofline

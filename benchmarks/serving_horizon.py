@@ -76,6 +76,70 @@ def obs_overhead(scenario: str = "steady", policy: str = "edf",
     }
 
 
+def reqtrace_overhead(scenario: str = "steady", policy: str = "edf",
+                      seed: int = 0, n_ticks: int = 3,
+                      sample_every: int = 16) -> Dict:
+    """Measure the cost of per-request causal tracing (repro.obs v3).
+
+    Mirrors :func:`obs_overhead`:
+
+    * ``disabled_noop_ns`` — per-call cost of the disabled hook (one
+      module-global load + ``is None`` check), measured on a tight loop.
+      This must stay within the PR-6 span budget (~0.25 µs).
+    * ``enabled_sampled_pct`` — wall-time delta of a horizon run with
+      tracing + decision ledger on (1-in-``sample_every`` sampling) vs
+      off (noisy on a busy host; informational).
+    * ``kept`` — number of sampled traces; deterministic for a fixed
+      (config, seed, sample_every), so it doubles as the regression
+      quality signal.
+    """
+    from repro.obs import ledger as _obs_ledger
+    from repro.obs import reqtrace as _obs_reqtrace
+
+    prev_rt = _obs_reqtrace._REQTRACER
+    prev_led = _obs_ledger._LEDGER
+    _obs_reqtrace._REQTRACER = None
+    _obs_ledger._LEDGER = None
+    cfg = HorizonConfig(scenario=scenario, policy=policy, seed=seed,
+                        n_ticks=n_ticks, **LOAD)
+    try:
+        run_horizon(cfg)  # warmup (imports, jit, caches)
+        t0 = time.perf_counter()
+        run_horizon(cfg)
+        disabled_s = time.perf_counter() - t0
+
+        # disabled-hook cost: the exact expression every hot-path call
+        # site evaluates when tracing is off
+        reps = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            for _ in range(10_000):
+                rt = _obs_reqtrace._REQTRACER
+                if rt is not None:  # pragma: no cover — rt is None here
+                    rt.event(0, "receipt", 0.0)
+            reps.append((time.perf_counter() - t0) / 10_000)
+        noop_s = float(np.median(reps))
+
+        rt = _obs_reqtrace.enable_request_tracing(
+            sample_every=sample_every)
+        _obs_ledger.enable_ledger()
+        t0 = time.perf_counter()
+        run_horizon(cfg)
+        enabled_s = time.perf_counter() - t0
+        kept = len(rt.kept())
+    finally:
+        _obs_reqtrace._REQTRACER = prev_rt
+        _obs_ledger._LEDGER = prev_led
+    return {
+        "disabled_s": disabled_s,
+        "enabled_s": enabled_s,
+        "disabled_noop_ns": noop_s * 1e9,
+        "kept": int(kept),
+        "enabled_sampled_pct":
+            100.0 * (enabled_s - disabled_s) / disabled_s,
+    }
+
+
 def run(scenarios: Sequence[str] = ("steady", "flash_crowd"),
         policies: Sequence[str] = ("edf", "fcfs"),
         seeds: Sequence[int] = (0, 1), n_ticks: int = 4,

@@ -25,7 +25,8 @@ import numpy as np
 
 from .instance import PIESInstance
 from .qos import qos_matrix_np
-from .placement import FEASIBILITY_TOL, egp_np
+from . import placement as _placement
+from .placement import FEASIBILITY_TOL, egp_np, sigma_upper_bound_np
 from .scheduling import sigma_np
 
 __all__ = ["DynamicPlacer", "evaluate_horizon"]
@@ -36,6 +37,8 @@ def _egp_with_bias(inst: PIESInstance, Q: np.ndarray,
     """EGP (Alg. 3) with a per-(edge, model) additive benefit bonus for
     already-resident implementations (hysteresis)."""
     x = np.zeros((inst.E, inst.P), dtype=bool)
+    # decision-ledger sink (installed by repro.obs.ledger; observational)
+    sink = _placement._DECISION_SINK
     for e in range(inst.E):
         users = inst.users_of_edge(e)
         if users.size == 0:
@@ -50,11 +53,28 @@ def _egp_with_bias(inst: PIESInstance, Q: np.ndarray,
         considered: set = set()
         satisfied = np.zeros(users.size, dtype=bool)
         remaining = float(inst.R[e])
+        if sink is not None:
+            best = np.zeros(users.size)
         while True:
             cand = [p for p in v if p not in considered]
             if not cand:
                 break
             p_star = max(cand, key=lambda p: (v[p], -p))
+            benefit = v[p_star]
+            rank = 0
+            bias_star = 0.0
+            if sink is not None:
+                # rank of the chosen candidate by *unbiased* benefit,
+                # against the v values the argmax actually saw (the
+                # same-service marginal rewrite below must not leak in):
+                # > 0 means the stickiness bonus overrode the pure-QoS
+                # argmax — the hysteresis override made visible
+                bias_star = bonus if resident[e, p_star] else 0.0
+                u_star = v[p_star] - bias_star
+                rank = sum(
+                    1 for q in cand
+                    if (v[q] - (bonus if resident[e, q] else 0.0), -q)
+                    > (u_star, -p_star))
             placed = inst.sm_r[p_star] <= remaining + FEASIBILITY_TOL
             if placed:
                 x[e, p_star] = True
@@ -69,6 +89,16 @@ def _egp_with_bias(inst: PIESInstance, Q: np.ndarray,
                             + (bonus if resident[e, p] else 0.0)
                 satisfied |= Qe[:, p_star] >= 1.0 - 1e-9
             considered.add(p_star)
+            if sink is not None:
+                gain = 0.0
+                if placed:
+                    gain = float(np.maximum(Qe[:, p_star] - best,
+                                            0.0).sum())
+                    best = np.maximum(best, Qe[:, p_star])
+                sink.pick(edge=e, impl=p_star, benefit=benefit,
+                          gain=gain, remaining=remaining,
+                          n_candidates=len(cand), rank=rank,
+                          placed=placed, bias=bias_star)
             if remaining <= FEASIBILITY_TOL or satisfied.all() \
                     or len(considered) == len(v):
                 break
@@ -107,7 +137,13 @@ class DynamicPlacer:
         self.new_loads = x & ~self._resident
         self.evicted = self._resident & ~x
         loads = int(self.new_loads.sum())
-        value = sigma_np(inst, x, Q) - self.switching_cost * loads
+        sigma = sigma_np(inst, x, Q)
+        value = sigma - self.switching_cost * loads
+        sink = _placement._DECISION_SINK
+        if sink is not None:
+            # close the tick's ledger record with the certificate
+            sink.end(sigma=sigma,
+                     sigma_bound=sigma_upper_bound_np(inst, Q))
         self._resident = x
         return x, value, loads
 

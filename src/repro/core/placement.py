@@ -40,6 +40,7 @@ __all__ = [
     "egp_np", "agp_np", "agp_literal_np", "sck_np", "rnd_np",
     "egp_place_jax", "agp_place_jax", "place_and_schedule",
     "egp_place_sparse_jax", "sigma_sparse_jnp",
+    "sigma_upper_bound_np",
 ]
 
 #: Shared feasibility slack for ``r_sm ≤ R̂`` checks. One constant for the
@@ -49,6 +50,34 @@ __all__ = [
 #: :func:`agp_np` and :func:`_agp_one_edge` — they can never disagree on
 #: which placements are feasible.
 FEASIBILITY_TOL = 1e-6
+
+#: Decision-ledger hook. ``repro.obs.ledger.enable_ledger()`` installs a
+#: :class:`~repro.obs.ledger.DecisionLedger` here (the core never imports
+#: obs); the greedy pick loops book every consideration through it. The
+#: disabled path is one global load + ``is None`` per placement call, and
+#: the ledger is observational — picks are recorded, never influenced.
+_DECISION_SINK = None
+
+
+def sigma_upper_bound_np(inst: PIESInstance,
+                         Q: Optional[np.ndarray] = None) -> float:
+    """Per-user relaxation upper bound σ̄ on the optimum of Eq. (1).
+
+    Every user is served by its best eligible implementation that would
+    fit its edge's *whole* storage budget on its own — i.e. the LP/ILP
+    with all coupling (shared budgets across services) relaxed away. By
+    construction ``σ̄ ≥ OPT ≥ σ(x)`` for any feasible ``x``, so the
+    Theorem-2 certificate ``σ(greedy) ≥ (1 − 1/e)·σ̄`` is strictly
+    stronger than the guarantee against OPT (and, being a relaxation,
+    σ̄ can overshoot — a ratio below the line flags a placement for
+    inspection rather than refuting the theorem).
+    """
+    if Q is None:
+        Q = qos_matrix_np(inst)
+    fits = inst.sm_r[None, :] <= (inst.R[inst.u_edge][:, None]
+                                  + FEASIBILITY_TOL)  # [U, P]
+    # Q is already zero for ineligible (user, impl) pairs
+    return float(np.where(fits, Q, 0.0).max(axis=1).sum())
 
 
 # ===========================================================================
@@ -70,6 +99,7 @@ def egp_np(inst: PIESInstance, Q: Optional[np.ndarray] = None) -> np.ndarray:
     if Q is None:
         Q = qos_matrix_np(inst)
     x = np.zeros((inst.E, inst.P), dtype=bool)
+    sink = _DECISION_SINK
 
     for e in range(inst.E):
         users = inst.users_of_edge(e)
@@ -85,12 +115,15 @@ def egp_np(inst: PIESInstance, Q: Optional[np.ndarray] = None) -> np.ndarray:
         considered: set = set()           # A
         satisfied = np.zeros(users.size, dtype=bool)  # B (mask over users)
         remaining = float(inst.R[e])      # R̂
+        if sink is not None:
+            best = np.zeros(users.size)   # σ_u over placed impls at e
 
         while True:
             cand = [p for p in v if p not in considered]
             if not cand:
                 break
             p_star = max(cand, key=lambda p: (v[p], -p))
+            benefit = v[p_star]
             placed = inst.sm_r[p_star] <= remaining + FEASIBILITY_TOL
             if placed:
                 x[e, p_star] = True
@@ -108,6 +141,18 @@ def egp_np(inst: PIESInstance, Q: Optional[np.ndarray] = None) -> np.ndarray:
                 # lines 18–19: users fully satisfied by (s*, m*)
                 satisfied |= Qe[:, p_star] >= 1.0 - 1e-9
             considered.add(p_star)
+            if sink is not None:
+                gain = 0.0
+                if placed:
+                    # exact marginal: the gains over placed picks
+                    # telescope to the realized σ of the edge
+                    gain = float(np.maximum(Qe[:, p_star] - best,
+                                            0.0).sum())
+                    best = np.maximum(best, Qe[:, p_star])
+                # rank 0 by construction: p_star is the benefit argmax
+                sink.pick(edge=e, impl=p_star, benefit=benefit,
+                          gain=gain, remaining=remaining,
+                          n_candidates=len(cand), rank=0, placed=placed)
             if remaining <= FEASIBILITY_TOL or satisfied.all() or len(considered) == len(v):
                 break
     return x
@@ -368,7 +413,8 @@ def egp_place_jax(Q, elig, u_edge, u_service, sm_service, sm_r, R, n_services,
 
 
 def egp_place_sparse_jax(cand_idx, cand_q, u_edge, sm_service, sm_r, R,
-                         *, max_iters: int = 512, use_kernel: bool = False):
+                         *, max_iters: int = 512, use_kernel: bool = False,
+                         with_trace: bool = False):
     """Algorithm 3 over a top-k sparse candidate set, all edges in lock-step.
 
     Takes the ``(cand_idx, cand_q) [U, k]`` pairs from
@@ -388,7 +434,18 @@ def egp_place_sparse_jax(cand_idx, cand_q, u_edge, sm_service, sm_r, R,
     (:mod:`repro.kernels.qos_matrix`); the default uses the identical jnp
     reduction (interpret-mode Pallas inside a while_loop is slow on CPU).
 
-    Returns ``x [E, P]`` bool.
+    ``with_trace=True`` additionally returns a per-iteration decision
+    trace for the observability ledger: ``[max_iters, E]`` arrays of the
+    pick (``impl``, −1 where an edge had no candidate / was done), its
+    benefit, exact marginal gain (booked in f32 against a per-user
+    ``best`` carry — gains telescope to ``sigma_sparse_jnp`` of the
+    result up to f32 summation, documented tolerance ~1e-3 relative),
+    the post-pick remaining budget, the candidate count, and the placed
+    mask. The traced and untraced paths make **identical decisions** —
+    the trace arrays are write-only extensions of the loop carry.
+
+    Returns ``x [E, P]`` bool (or ``(x, trace_dict)`` with
+    ``with_trace=True``).
     """
     import jax
     import jax.numpy as jnp
@@ -425,16 +482,24 @@ def egp_place_sparse_jax(cand_idx, cand_q, u_edge, sm_service, sm_r, R,
         return jnp.argmax(jnp.where(cand, v, NEG), axis=1)
 
     def cond(state):
-        done, it = state[-1], state[-2]
+        # `it` and `done` sit at fixed positions in both carry layouts
+        # (with and without the trace extension)
+        done, it = state[-1], state[5]
         return (~done.all()) & (it < max_iters)
 
     def body(state):
-        x, v, considered, satisfied, remaining, it, done = state
+        if with_trace:
+            (x, v, considered, satisfied, remaining, it,
+             best_u, tr, done) = state
+        else:
+            x, v, considered, satisfied, remaining, it, done = state
         cand = relevant & ~considered
         any_cand = cand.any(axis=1)                       # [E]
         p_star = masked_argmax(v, cand)                   # [E] line 11
         fits = sm_r[p_star] <= remaining + FEASIBILITY_TOL
         place = fits & any_cand & ~done                   # lines 12–14
+        active = any_cand & ~done     # edges actually picking this iter
+        benefit = jnp.take_along_axis(v, p_star[:, None], 1)[:, 0]
         x = x.at[e_arange, p_star].set(x[e_arange, p_star] | place)
         remaining = remaining - jnp.where(place, sm_r[p_star], 0.0)
 
@@ -442,6 +507,23 @@ def egp_place_sparse_jax(cand_idx, cand_q, u_edge, sm_service, sm_r, R,
         place_u = place[erow]
         # Q(u, s_u, m*) per user — 0 unless p* is one of u's candidates.
         qstar_u = jnp.where(col == pstar_u[:, None], qpair, 0.0).sum(axis=1)
+
+        if with_trace:
+            # exact marginal per placed pick, booked before best_u moves
+            imp_u = jnp.where(place_u,
+                              jnp.maximum(qstar_u - best_u, 0.0), 0.0)
+            gain_e = jnp.zeros(E, jnp.float32).at[erow].add(imp_u)
+            best_u = jnp.where(place_u, jnp.maximum(best_u, qstar_u),
+                               best_u)
+            t_pick, t_place, t_ben, t_gain, t_rem, t_ncand = tr
+            tr = (
+                t_pick.at[it].set(jnp.where(active, p_star, -1)),
+                t_place.at[it].set(place),
+                t_ben.at[it].set(jnp.where(active, benefit, 0.0)),
+                t_gain.at[it].set(gain_e),
+                t_rem.at[it].set(remaining),
+                t_ncand.at[it].set(cand.sum(axis=1).astype(jnp.int32)),
+            )
 
         def rescore(arg):
             # lines 15–16: v[p] = Σ_unsat (Q[u,p] − Q[u,p*]) for siblings
@@ -469,11 +551,29 @@ def egp_place_sparse_jax(cand_idx, cand_q, u_edge, sm_service, sm_r, R,
         all_cons = (considered | ~relevant).all(axis=1)
         # line 20 — same stop conditions (and tolerances) as _egp_one_edge
         done = done | ~any_cand | (remaining <= 1e-6) | all_sat | all_cons
+        if with_trace:
+            return (x, v, considered, satisfied, remaining, it + 1,
+                    best_u, tr, done)
         return x, v, considered, satisfied, remaining, it + 1, done
 
-    init = (jnp.zeros((E, P), bool), v0, jnp.zeros((E, P), bool),
-            jnp.zeros(U, bool), R.astype(jnp.float32), jnp.int32(0),
-            jnp.zeros(E, bool))
+    init_core = (jnp.zeros((E, P), bool), v0, jnp.zeros((E, P), bool),
+                 jnp.zeros(U, bool), R.astype(jnp.float32), jnp.int32(0))
+    if with_trace:
+        tr0 = (jnp.full((max_iters, E), -1, jnp.int32),
+               jnp.zeros((max_iters, E), bool),
+               jnp.zeros((max_iters, E), jnp.float32),
+               jnp.zeros((max_iters, E), jnp.float32),
+               jnp.zeros((max_iters, E), jnp.float32),
+               jnp.zeros((max_iters, E), jnp.int32))
+        init = init_core + (jnp.zeros(U, jnp.float32), tr0,
+                            jnp.zeros(E, bool))
+        out = jax.lax.while_loop(cond, body, init)
+        x, tr = out[0], out[7]
+        trace = {"pick": tr[0], "placed": tr[1], "benefit": tr[2],
+                 "gain": tr[3], "remaining": tr[4],
+                 "n_candidates": tr[5], "n_iters": out[5]}
+        return x, trace
+    init = init_core + (jnp.zeros(E, bool),)
     x, *_ = jax.lax.while_loop(cond, body, init)
     return x
 
@@ -514,4 +614,9 @@ def place_and_schedule(inst: PIESInstance, algo: str = "egp", seed: int = 0,
     else:
         raise ValueError(f"unknown algorithm {algo!r}")
     y, value = oms_np(inst, x, Q)
+    if _DECISION_SINK is not None and algo == "egp":
+        # close the ledger record with the Theorem-2 certificate:
+        # σ(greedy) vs (1 − 1/e) · σ̄ (relaxation upper bound)
+        _DECISION_SINK.end(sigma=value,
+                           sigma_bound=sigma_upper_bound_np(inst, Q))
     return x, y, value

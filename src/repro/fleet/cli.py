@@ -142,26 +142,37 @@ def _watch_status(args: argparse.Namespace) -> int:
     interval = max(float(getattr(args, "interval", 2.0)), 0.05)
     clear = sys.stdout.isatty()
     out = None
+
+    def _drain_streams() -> None:
+        streams = sorted((root / "stream").glob("*.jsonl"))
+        if not streams:
+            return
+        state = DashState()
+        for p in streams:
+            try:
+                for frame in read_stream(str(p), follow=False):
+                    state.update(frame)
+            except (StreamError, OSError):
+                continue  # torn tail of a live file; retry next tick
+        if state.n_frames:
+            print()
+            print(render(state))
+
     while True:
         out = status(args.root, target_store=args.store)
         if clear:
             sys.stdout.write("\x1b[H\x1b[2J")
         _print_status(out)
-        streams = sorted((root / "stream").glob("*.jsonl"))
-        if streams:
-            state = DashState()
-            for p in streams:
-                try:
-                    for frame in read_stream(str(p), follow=False):
-                        state.update(frame)
-                except (StreamError, OSError):
-                    continue  # torn tail of a live file; retry next tick
-            if state.n_frames:
-                print()
-                print(render(state))
         q = out["queue"]
         if q["pending"] == 0 and q["leased"] == 0:
+            # Final flush: workers emit their last frames (bye, metrics
+            # rollups) around the moment the queue drains — re-read the
+            # streams once after observing the drain so those frames make
+            # the final screen instead of being dropped on exit.
+            time.sleep(min(interval, 0.2))
+            _drain_streams()
             break
+        _drain_streams()
         time.sleep(interval)
     if args.json and out is not None:
         Path(args.json).parent.mkdir(parents=True, exist_ok=True)

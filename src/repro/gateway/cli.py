@@ -50,6 +50,44 @@ def _add_run_args(p: argparse.ArgumentParser) -> None:
                    help="scenario/serving override (repeatable)")
     p.add_argument("--speed", type=float, default=1.0,
                    help="RPS multiplier over the trace's native rate")
+    p.add_argument("--reqtrace", default=None, metavar="PATH",
+                   help="enable per-request causal tracing and save the "
+                        "sampled traces here (feed to `repro.obs "
+                        "explain`)")
+    p.add_argument("--reqtrace-sample", type=int, default=16,
+                   metavar="N", help="hash-sample 1-in-N ordinary "
+                                     "requests (misses/drops/requeues "
+                                     "are always kept; default 16)")
+    p.add_argument("--ledger", default=None, metavar="PATH",
+                   help="enable the greedy decision ledger and save the "
+                        "JSONL here (feed to `repro.obs why`)")
+
+
+def _enable_v3(args: argparse.Namespace):
+    """Turn on reqtrace/ledger per the flags; return the saver."""
+    from repro.obs import ledger as _ledger
+    from repro.obs import reqtrace as _reqtrace
+
+    if getattr(args, "reqtrace", None):
+        _reqtrace.enable_request_tracing(sample_every=args.reqtrace_sample)
+    if getattr(args, "ledger", None):
+        _ledger.enable_ledger()
+
+    def _save() -> None:
+        if getattr(args, "reqtrace", None):
+            rt = _reqtrace.disable_request_tracing()
+            if rt is not None:
+                rt.save(args.reqtrace)
+                print(f"[gateway] reqtrace: {len(rt.kept())} sampled "
+                      f"trace(s) -> {args.reqtrace}", flush=True)
+        if getattr(args, "ledger", None):
+            led = _ledger.disable_ledger()
+            if led is not None:
+                led.save(args.ledger)
+                print(f"[gateway] ledger: {len(led.records())} epoch "
+                      f"record(s) -> {args.ledger}", flush=True)
+
+    return _save
 
 
 def _cmd_serve(args: argparse.Namespace) -> int:
@@ -60,6 +98,7 @@ def _cmd_serve(args: argparse.Namespace) -> int:
         obs.enable_stream(args.stream, source="gateway")
     else:
         obs.enable_stream_from_env()
+    save_v3 = _enable_v3(args)
     host, _, port = args.listen.rpartition(":")
     gw = Gateway(GatewayConfig(
         horizon=_hconfig(args),
@@ -78,6 +117,7 @@ def _cmd_serve(args: argparse.Namespace) -> int:
         return await task
 
     result = asyncio.run(_serve())
+    save_v3()
     print(f"[gateway] done: {len(result.per_tick)} tick(s), "
           f"{result.served}/{result.submitted} served, "
           f"qos {result.mean_realized_qos:.4f}, "
@@ -104,6 +144,7 @@ def _cmd_replay(args: argparse.Namespace) -> int:
     from .server import Gateway, GatewayConfig
 
     hconfig = _hconfig(args)
+    save_v3 = _enable_v3(args)
     gw = Gateway(GatewayConfig(horizon=hconfig, mode="virtual"))
 
     async def _replay():
@@ -115,6 +156,7 @@ def _cmd_replay(args: argparse.Namespace) -> int:
         return await task
 
     live = asyncio.run(_replay())
+    save_v3()   # live-run traces only — the offline half runs untraced
     offline = run_horizon(hconfig)
     d_live, d_off = result_digest(live), result_digest(offline)
     match = d_live == d_off
@@ -131,6 +173,7 @@ def _cmd_soak(args: argparse.Namespace) -> int:
     # REPRO_OBS_STREAM=<spec> → per-tick gateway frames stream live
     # during the soak (the CI smoke tails them with `repro.obs dash`)
     obs.enable_stream_from_env(source="gateway")
+    save_v3 = _enable_v3(args)
     overrides = {}
     for item in args.override or []:
         k, _, v = item.partition("=")
@@ -142,6 +185,7 @@ def _cmd_soak(args: argparse.Namespace) -> int:
                       speed=args.speed, duration_s=args.duration,
                       tcp=args.tcp, max_ingress=args.max_ingress,
                       overrides=overrides)
+    save_v3()
     if args.json:
         print(json.dumps(report.to_json(), indent=2), flush=True)
     else:

@@ -38,6 +38,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from repro import obs
+from repro.obs import reqtrace as _reqtrace
 from repro.obs.metrics import MetricsRegistry
 from repro.serving.horizon import (HorizonConfig, HorizonResult,
                                    TickController)
@@ -180,6 +181,18 @@ class Gateway:
     def _step_tick(self, t: int, envs: List[RequestEnvelope],
                    lag_ms: float, admission_ms: List[float]) -> None:
         cfg = self.config
+        rt = _reqtrace._REQTRACER
+        # the controller assigns tick t's uids as ctl.uid + env.u —
+        # capture the base before step() advances it
+        uid_base = self.ctl.uid
+        if rt is not None and cfg.mode == "wall":
+            for env in sorted(envs, key=lambda e: e.u):
+                recv = getattr(env, "_recv", None)
+                if recv is not None:
+                    # socket-receipt time on the wall clock (simulation
+                    # timestamps follow at admit)
+                    rt.event(uid_base + env.u, "receipt", float(recv),
+                             clock="wall", tick=t)
         if envs:
             inst, times = instance_from_requests(
                 self.ctl.scenario, cfg.horizon.seed, t, envs)
@@ -190,7 +203,19 @@ class Gateway:
         self.counters["gateway.ticks"] += 1
         if cfg.mode == "wall":
             self._lag_hist.observe(lag_ms)
-            self._adm_hist.observe_many(admission_ms)
+            if rt is not None and len(admission_ms) == len(envs):
+                # admission histogram exemplars link buckets to uids
+                # (bucket counts identical to the observe_many path).
+                # Kept-status is unknowable at admission time, so only
+                # hash-sampled uids — which always survive to the kept
+                # ring — get an exemplar; tail-kept specials don't.
+                for env, ms in zip(envs, admission_ms):
+                    uid = uid_base + env.u
+                    self._adm_hist.observe(
+                        ms, exemplar=rt.exemplar(uid, t)
+                        if rt._hash_keep(uid) else None)
+            else:
+                self._adm_hist.observe_many(admission_ms)
         entry = {
             "tick": t, "admitted": len(envs),
             "ingress_depth": self.queue.qsize(),

@@ -39,6 +39,13 @@ from .aggregate import (rollup_counters, rollup_metrics, stitch_fleet,
                         stitch_traces)
 from .slo import (DEFAULT_SLOS, SLO, SLO_SCHEMA_VERSION, SLOReport,
                   compare_bench, evaluate_slos, load_slos)
+from .reqtrace import (REQTRACE_SCHEMA_VERSION, RequestTracer,
+                       disable_request_tracing, enable_request_tracing,
+                       enable_reqtrace_from_env, explain_uid,
+                       get_request_tracer, load_reqtrace)
+from .ledger import (LEDGER_SCHEMA_VERSION, DecisionLedger, disable_ledger,
+                     enable_ledger, enable_ledger_from_env, get_ledger,
+                     ingest_sparse_trace, load_ledger, why_text)
 
 __all__ = [
     "OBS_SCHEMA_VERSION", "METRICS_SCHEMA_VERSION", "DEFAULT_CAPACITY",
@@ -53,4 +60,10 @@ __all__ = [
     "stitch_traces", "stitch_fleet", "rollup_metrics", "rollup_counters",
     "SLO", "SLOReport", "DEFAULT_SLOS", "load_slos", "evaluate_slos",
     "compare_bench",
+    "REQTRACE_SCHEMA_VERSION", "RequestTracer", "enable_request_tracing",
+    "disable_request_tracing", "get_request_tracer",
+    "enable_reqtrace_from_env", "load_reqtrace", "explain_uid",
+    "LEDGER_SCHEMA_VERSION", "DecisionLedger", "enable_ledger",
+    "disable_ledger", "get_ledger", "enable_ledger_from_env",
+    "ingest_sparse_trace", "load_ledger", "why_text",
 ]

@@ -28,6 +28,12 @@ Operates on the artifacts the rest of the repo produces::
     python -m repro.obs slo --stream /tmp/stream.jsonl
     python -m repro.obs slo --bench BENCH_latest.json --spec slos.json
 
+    # causal chain of one sampled request (reqtrace export or stream)
+    python -m repro.obs explain --uid 1234 --trace /tmp/reqtrace.json
+
+    # greedy decision provenance for a placement epoch
+    python -m repro.obs why --tick 3 --ledger /tmp/ledger.jsonl
+
 Artifacts come from ``python -m repro.sweeps ... --obs PATH``, from
 ``REPRO_OBS=1 REPRO_OBS_DIR=...`` in any instrumented process (fleet
 workers inherit it), or from ``Tracer.save`` directly. Streams come from
@@ -229,6 +235,31 @@ def _cmd_stitch(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_explain(args: argparse.Namespace) -> int:
+    from .reqtrace import explain_uid, load_reqtrace
+
+    doc = load_reqtrace(args.trace)
+    print(explain_uid(doc, args.uid, tick=args.tick))
+    return 0
+
+
+def _cmd_why(args: argparse.Namespace) -> int:
+    from .ledger import load_ledger, why_text
+
+    recs = load_ledger(args.ledger)
+    if args.tick is not None:
+        recs = [r for r in recs if r.get("tick") == args.tick]
+    if not recs:
+        have = sorted({r.get("tick") for r in load_ledger(args.ledger)})
+        raise ValueError(
+            f"no decision record for tick {args.tick} in {args.ledger}"
+            f" (ticks with records: {have})" if args.tick is not None
+            else f"no decision records in {args.ledger}")
+    for rec in recs[-1:] if args.tick is None else recs:
+        print(why_text(rec, edge=args.edge))
+    return 0
+
+
 def _cmd_slo(args: argparse.Namespace) -> int:
     from .slo import DEFAULT_SLOS, evaluate_slos, load_slos
     from .stream import read_stream
@@ -309,6 +340,31 @@ def main(argv: Optional[List[str]] = None) -> int:
                      help="write the stitch summary (workers, counters, "
                           "rolled-up metrics) here")
     sti.set_defaults(fn=_cmd_stitch)
+
+    exp = sub.add_parser("explain", help="reconstruct one request's "
+                                         "causal chain from a reqtrace "
+                                         "export or stream")
+    exp.add_argument("--uid", type=int, required=True,
+                     help="request uid (see `obs dash` requests pane or "
+                          "the reqtrace export's kept uids)")
+    exp.add_argument("--tick", type=int, default=None,
+                     help="disambiguate when the uid appears in several "
+                          "ticks (uids are unique per run; optional)")
+    exp.add_argument("--trace", required=True, metavar="PATH",
+                     help="reqtrace snapshot JSON or stream JSONL")
+    exp.set_defaults(fn=_cmd_explain)
+
+    wh = sub.add_parser("why", help="greedy decision provenance for one "
+                                    "placement epoch: per-pick marginal "
+                                    "gains, gain curve, (1-1/e) "
+                                    "certificate")
+    wh.add_argument("--tick", type=int, default=None,
+                    help="placement epoch to explain (default: latest)")
+    wh.add_argument("--edge", type=int, default=None,
+                    help="only show picks for this edge")
+    wh.add_argument("--ledger", required=True, metavar="PATH",
+                    help="decision-ledger JSONL or stream JSONL")
+    wh.set_defaults(fn=_cmd_why)
 
     sl = sub.add_parser("slo", help="evaluate SLOs against streams, an "
                                     "artifact, or a benchmark JSON; exit "

@@ -6,7 +6,9 @@ sockets, any number of streams — e.g. one per fleet worker) and renders
 a refreshing text dashboard: per-scenario tick rate, realized QoS,
 deadline-miss rate, queue depth and in-flight count from ``tick``
 frames; per-worker items/s and pending-task ETA from ``worker`` frames;
-sweep chunk throughput from ``chunk`` frames; and the live SLO pane
+sweep chunk throughput from ``chunk`` frames; the most recent sampled
+request traces from ``reqtrace`` frames (uid/edge/impl/latency/flags —
+feed a uid to ``python -m repro.obs explain``); and the live SLO pane
 (:mod:`repro.obs.slo` burn rates) evaluated over the same frames.
 
 Everything is pure functions over accumulated frames
@@ -20,6 +22,7 @@ import queue
 import sys
 import threading
 import time
+from collections import deque
 from typing import Any, Dict, Iterable, List, Mapping, Optional
 
 from .slo import DEFAULT_SLOS, SLO, evaluate_slos
@@ -45,6 +48,9 @@ class DashState:
         self.gateways: Dict[tuple, Dict[str, Any]] = {}
         self.chunks = {"n": 0, "items": 0}
         self.counters: Dict[str, float] = {}
+        #: most recent sampled request traces (reqtrace frames)
+        self.requests: "deque" = deque(maxlen=8)
+        self.n_requests = 0
         self.last_t: Optional[float] = None
 
     def update(self, frame: Mapping[str, Any]) -> None:
@@ -82,6 +88,9 @@ class DashState:
             self.chunks["items"] += int(payload.get("items", 0))
         elif kind == "metrics":
             self.counters.update(payload.get("counters", {}))
+        elif kind == "reqtrace":
+            self.requests.append(payload)
+            self.n_requests += 1
 
     def tick_rate(self, cell: Mapping[str, Any]) -> float:
         span = cell.get("last_t", 0.0) - cell.get("first_t", 0.0)
@@ -155,6 +164,24 @@ def render(state: DashState, *, slos: Iterable[SLO] = DEFAULT_SLOS,
                        f"{_fmt(rate, '.2f', 8)} "
                        f"{pending if pending is not None else 'n/a':>8} "
                        f"{_fmt(eta, '.0f', 7) + 's' if eta is not None else '     n/a'}")
+
+    if state.requests:
+        out.append("")
+        out.append(f" requests ({state.n_requests} sampled)"
+                   f"{'':<7} {'uid':>6} {'tick':>5} {'edge':>5} "
+                   f"{'impl':>5} {'lat ms':>8} {'kept for':>13} flags")
+        for rec in state.requests:
+            impl = next((ev.get("impl") for ev in rec.get("events", [])
+                         if ev.get("stage") == "route"), None)
+            lat = rec.get("latency_s")
+            flags = ",".join(f for f in ("dropped", "missed", "requeued")
+                             if rec.get(f)) or "-"
+            out.append(
+                f" {'':<20} {rec.get('uid', '?'):>6} "
+                f"{rec.get('tick', '?'):>5} {rec.get('edge', '?'):>5} "
+                f"{impl if impl is not None else '-':>5} "
+                f"{_fmt(lat * 1e3 if lat is not None else None, '.2f', 8)} "
+                f"{str(rec.get('keep_reason', '?')):>13} {flags}")
 
     if state.chunks["n"]:
         out.append("")

@@ -94,10 +94,11 @@ class Histogram:
     """
 
     __slots__ = ("growth", "min_value", "_log_growth", "_buckets",
-                 "count", "sum", "min", "max")
+                 "count", "sum", "min", "max", "exemplar_cap",
+                 "_exemplars")
 
     def __init__(self, growth: float = DEFAULT_GROWTH,
-                 min_value: float = 1e-9):
+                 min_value: float = 1e-9, exemplar_cap: int = 2):
         if not growth > 1.0:
             raise ValueError(f"growth must be > 1, got {growth}")
         self.growth = float(growth)
@@ -108,6 +109,11 @@ class Histogram:
         self.sum = 0.0
         self.min = math.inf
         self.max = -math.inf
+        # bucket index -> up to exemplar_cap concrete exemplars (e.g.
+        # {"uid", "tick"} request-trace links). First-N retention keeps
+        # the exemplar set deterministic under identical input order.
+        self.exemplar_cap = int(exemplar_cap)
+        self._exemplars: Dict[int, List[Any]] = {}
 
     def _index(self, v: float) -> int:
         """Smallest ``i`` with ``min_value * growth**i >= v``."""
@@ -119,7 +125,7 @@ class Histogram:
     def _upper_edge(self, i: int) -> float:
         return self.min_value * self.growth ** i
 
-    def observe(self, v: float) -> None:
+    def observe(self, v: float, exemplar: Any = None) -> None:
         v = float(v)
         if math.isnan(v):
             return  # a tick that served nothing has NaN mean latency
@@ -129,6 +135,10 @@ class Histogram:
         self.sum += v
         self.min = v if v < self.min else self.min
         self.max = v if v > self.max else self.max
+        if exemplar is not None:
+            ex = self._exemplars.setdefault(i, [])
+            if len(ex) < self.exemplar_cap:
+                ex.append(exemplar)
 
     def observe_many(self, values: Iterable[float]) -> None:
         for v in values:
@@ -170,12 +180,19 @@ class Histogram:
         }
 
     def record(self) -> Dict[str, Any]:
-        return {
+        rec = {
             "growth": self.growth,
             "min_value": self.min_value,
             "buckets": {str(i): n for i, n in sorted(self._buckets.items())},
             **self.summary(),
         }
+        # additive-optional field: absent when no exemplars were ever
+        # attached, so METRICS_SCHEMA_VERSION stays 1 and old readers
+        # (which ignore unknown keys) keep working
+        if self._exemplars:
+            rec["exemplars"] = {str(i): ex for i, ex
+                                in sorted(self._exemplars.items())}
+        return rec
 
     @classmethod
     def from_record(cls, rec: Mapping[str, Any]) -> "Histogram":
@@ -191,6 +208,8 @@ class Histogram:
         if h.count:
             h.min = float(rec["min"])
             h.max = float(rec["max"])
+        h._exemplars = {int(i): list(ex)
+                        for i, ex in rec.get("exemplars", {}).items()}
         return h
 
     def merge(self, other: "Histogram") -> "Histogram":
@@ -212,6 +231,9 @@ class Histogram:
         self.sum += other.sum
         self.min = min(self.min, other.min)
         self.max = max(self.max, other.max)
+        for i, ex in other._exemplars.items():
+            mine = self._exemplars.setdefault(i, [])
+            mine.extend(ex[: max(0, self.exemplar_cap - len(mine))])
         return self
 
 

@@ -325,6 +325,12 @@ class FrameValidator:
         self.last_seq: Optional[int] = None
         self.hello: Optional[Dict[str, Any]] = None
 
+    def reset(self) -> None:
+        """Forget all state — the stream restarted (file truncated or
+        rotated), so the next frame must be a fresh hello handshake."""
+        self.last_seq = None
+        self.hello = None
+
     def feed_line(self, line: str) -> Dict[str, Any]:
         try:
             frame = json.loads(line)
@@ -391,6 +397,13 @@ def _read_file(path: Path, follow: bool, timeout_s: float, poll_s: float,
     deadline = time.monotonic() + timeout_s
     while True:
         try:
+            # A shrunken file means the writer truncated or rotated the
+            # stream in place: restart from offset 0 with fresh validator
+            # state (the new stream begins with its own hello handshake).
+            if pos and os.stat(path).st_size < pos:
+                pos = 0
+                buf = ""
+                validator.reset()
             with open(path) as f:
                 f.seek(pos)
                 chunk = f.read()

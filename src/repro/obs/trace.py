@@ -512,7 +512,11 @@ def validate_chrome_trace(doc: Mapping[str, Any]) -> int:
             for field in ("name", "ts", "dur", "pid", "tid"):
                 if field not in ev:
                     raise ValueError(f"X event missing {field!r}: {ev!r}")
-            if ev["dur"] < 0:
-                raise ValueError(f"negative duration: {ev!r}")
+            if ev["dur"] <= 0:
+                raise ValueError(
+                    f"non-positive duration ({ev['dur']}): span "
+                    f"{ev.get('name')!r} must close strictly after it "
+                    f"opens — zero-length spans indicate a clock that "
+                    f"did not advance: {ev!r}")
             n_x += 1
     return n_x

@@ -66,6 +66,8 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 import numpy as np
 
 from repro import obs
+from repro.obs import ledger as _obs_ledger
+from repro.obs import reqtrace as _reqtrace
 from repro.core.dynamic import DynamicPlacer
 from repro.core.instance import PIESInstance
 from repro.core.qos import qos_matrix_np
@@ -284,6 +286,10 @@ def _requeue_evicted(sched: ContinuousScheduler, evicted: np.ndarray,
         u_delta=np.array([r.delta for r in pulled], np.float64),
         delta_max=inst.delta_max)
     y, _ = oms_np(mini, x, qos_matrix_np(mini))
+    rt = _reqtrace._REQTRACER
+    # re-routing happens at the current tick's placement epoch; one meta
+    # entry exists per already-completed tick, so this *is* tick len(meta)
+    t_now = len(meta) * config.tick_duration
     for r, p2 in zip(pulled, y):
         p2 = int(p2)
         if p2 < 0:
@@ -291,7 +297,11 @@ def _requeue_evicted(sched: ContinuousScheduler, evicted: np.ndarray,
             tick_reqs[t0] = [q for q in tick_reqs[t0] if q.uid != r.uid]
             meta[t0]["dropped"] += 1
             sched.unsubmit(r)   # keeps backlog() exact: it never completes
+            if rt is not None:
+                rt.drop(r.uid, t_now, reason="evicted_unroutable")
             continue
+        if rt is not None:
+            rt.requeue(r.uid, t_now, impl=p2)
         r.impl = p2
         r.accuracy = float(inst.sm_acc[p2])
         key = (r.edge, p2)
@@ -395,12 +405,27 @@ class TickController:
         """
         config, sc, placer, sched = (self.config, self.scenario,
                                      self.placer, self.sched)
+        # request tracing + decision ledger: off by default, one global
+        # load + None check each; observational only (byte-identity of
+        # TickReports / digests is tested per policy)
+        rt = _reqtrace._REQTRACER
+        led = _obs_ledger._LEDGER
+        if rt is not None:
+            rt.set_context(config.seed)
         with obs.span("tick.place", tick=t):
             with obs.kernel_span("qos_matrix_np", U=inst.U, P=inst.P):
                 Q = qos_matrix_np(inst)
+            if led is not None:
+                led.begin(tick=t, seed=config.seed,
+                          algo="egp_feedback" if self.feedback
+                          else "egp_hysteresis")
             x, value, loads = placer.step(inst, Q)
             applied_stickiness = placer.current_stickiness \
                 if self.feedback else config.stickiness
+            if rt is not None:
+                rt.epoch(t, value=float(value), loads=int(loads),
+                         n_placed=int(x.sum()),
+                         stickiness=float(applied_stickiness))
             # cold starts: every implementation the placer just loaded
             # spends the first switching_cost seconds of the tick loading
             # and serves nothing until then — gated up front, so an impl
@@ -429,9 +454,27 @@ class TickController:
             reqs: List[ArrivingRequest] = []
             for u in range(inst.U):
                 p = int(y[u])
-                if p < 0:
-                    continue
                 e = int(inst.u_edge[u])
+                if rt is not None:
+                    rt.admit(self.uid + u, t, edge=e,
+                             service=int(inst.u_service[u]),
+                             alpha=float(inst.u_alpha[u]),
+                             delta=float(inst.u_delta[u]),
+                             arrival=float(times[u]))
+                if p < 0:
+                    if rt is not None:
+                        rt.drop(self.uid + u, float(times[u]),
+                                reason="no_placed_impl")
+                    continue
+                if rt is not None:
+                    # chosen vs rejected: the other *placed* impls OMS
+                    # could have routed this user to (Q > 0 ⇔ eligible)
+                    opts = np.nonzero(x[e] & (Q[u] > 0.0))[0]
+                    rej = sorted(((int(pp), float(Q[u, pp]))
+                                  for pp in opts if int(pp) != p),
+                                 key=lambda z: -z[1])[:4]
+                    rt.route(self.uid + u, float(times[u]), impl=p,
+                             q=float(Q[u, p]), candidates=rej)
                 if (e, p) not in sched.executors:
                     sched.add_executor(
                         (e, p), ExecutorProfile.from_comp_cost(
@@ -490,6 +533,15 @@ class TickController:
                 "completed": len(window), "window_qos": window_qos,
                 "miss_rate": window_miss, "requeued": n_requeued,
                 "model_loads": loads})
+            # kept request traces + the tick's decision-ledger record
+            # ride the same wire (unknown types are ignored by old
+            # readers, so the stream schema version stays put)
+            if rt is not None:
+                for rec in rt.drain_emits():
+                    pub.emit("reqtrace", rec)
+            if led is not None:
+                for rec in led.drain_emits():
+                    pub.emit("ledger", rec)
 
         if self.feedback:
             # close the loop on what actually *completed* this tick — the
@@ -552,6 +604,10 @@ class TickController:
             sched.drain()
 
         tracer = obs.get_tracer()
+        rt = _reqtrace._REQTRACER
+        # exemplars must point at traces `obs explain` can resolve —
+        # only kept (sampled-in) uids qualify
+        kept_uids = set(rt.kept_uids()) if rt is not None else set()
         lat_hist = tracer.metrics.histogram(
             "serving.latency_s", scenario=config.scenario,
             policy=config.policy) if tracer is not None else None
@@ -569,7 +625,17 @@ class TickController:
                 lats, qos, missed = (np.zeros(0), np.zeros(0),
                                      np.zeros(0, bool))
             if lat_hist is not None:
-                lat_hist.observe_many(lats)
+                if rt is not None:
+                    # exemplars: each latency bucket links up to N
+                    # concrete request traces (bucket counts are
+                    # identical to the observe_many path)
+                    for r, lat in zip(reqs, lats):
+                        lat_hist.observe(
+                            float(lat),
+                            exemplar=rt.exemplar(r.uid, t)
+                            if r.uid in kept_uids else None)
+                else:
+                    lat_hist.observe_many(lats)
             per_tick.append(TickReport(
                 tick=t, submitted=m["submitted"], served=len(reqs),
                 dropped=m["dropped"],
@@ -616,6 +682,13 @@ class TickController:
                 "deadline_misses": result.deadline_misses,
                 "mean_realized_qos": result.mean_realized_qos,
                 "miss_rate": result.miss_rate})
+            if rt is not None:
+                for rec in rt.drain_emits():
+                    pub.emit("reqtrace", rec)
+            led = _obs_ledger._LEDGER
+            if led is not None:
+                for rec in led.drain_emits():
+                    pub.emit("ledger", rec)
             if tracer is not None:
                 pub.emit_metrics(tracer)
         return result

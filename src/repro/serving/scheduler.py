@@ -43,6 +43,10 @@ import numpy as np
 from repro.core.instance import PIESInstance
 from repro.core.qos import (accuracy_satisfaction_elem_np,
                             delay_satisfaction_elem_np)
+# request-lifecycle tracing hook: the hot loop reads one module global
+# (reqtrace._REQTRACER) per run_until/_admit call — disabled cost is a
+# load + None check; enabled hooks are observational only
+from repro.obs import reqtrace as _reqtrace
 
 __all__ = ["ArrivingRequest", "ExecutorProfile", "ContinuousScheduler",
            "realized_qos_np", "simulate"]
@@ -259,18 +263,31 @@ class ContinuousScheduler:
             self._push(r.arrival, _ARRIVE, key, r)
 
     def _admit(self, key: Tuple[int, int], now: float) -> None:
+        rt = _reqtrace._REQTRACER
         for started in self.executors[key].admit(now):
             self._push(started.finish, _FINISH, key, started)
+            if rt is not None:
+                rt.execute(started.uid, started.start,
+                           wait_s=max(started.start - started.arrival,
+                                      0.0))
 
     def run_until(self, t_end: float) -> None:
         """Process every event with ``time ≤ t_end``; keep the rest."""
+        rt = _reqtrace._REQTRACER
         while self._events and self._events[0][0] <= t_end:
             now, _, kind, key, r = heapq.heappop(self._events)
             if kind == _ARRIVE:
                 self.executors[key].submit(r)
+                if rt is not None:
+                    rt.event(r.uid, "queue", now, edge=key[0],
+                             impl=key[1])
             elif kind == _FINISH:
                 self.executors[key].complete(r)
                 self.completed.append(r)
+                if rt is not None:
+                    lat = max(r.finish - r.arrival, 0.0)
+                    rt.complete(r.uid, now, latency=lat,
+                                missed=lat > r.delta)
             # _KICK carries no payload — it exists to re-run admission
             self._admit(key, now)
             self.now = max(self.now, now)
